@@ -1,0 +1,77 @@
+"""Paper Figs 2, 7, 8: rate-distortion of the three progressive families.
+
+Fig 2: primary-data progressive requests ε'_i = 0.1·2^-i — bitrate per
+method (PSZ3 shows snapshot redundancy, PSZ3-delta stair-cases, PMGARD-HB
+is ~linear in log-ε).
+Figs 7/8: single requested QoI error per session (VTOT on GE-like; molar
+product on S3D-like) — retrieved bitrate per method.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import ge
+from repro.core.qoi import Prod, Var
+from repro.core.refactor import refactor_variables
+from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
+from repro.data.synthetic import ge_like_fields, s3d_like_fields
+
+METHODS = ("psz3", "psz3_delta", "hb")
+
+
+def _progressive_pd_requests(fields, method):
+    """Fig 2: request primary-data bounds directly on one variable."""
+    arch = refactor_variables({"P": fields["P"]}, method=method,
+                              mask_zero_velocity=False)
+    session = arch.open()
+    rng = arch.ranges["P"]
+    out = []
+    for i in range(1, 16, 2):
+        eps = 0.1 * 2.0 ** -i * rng
+        data, ach = session.reconstruct("P", eps)
+        err = np.abs(data - fields["P"]).max()
+        assert err <= ach * (1 + 1e-9), (method, i, err, ach)
+        out.append((i, session.bitrate(["P"])))
+    return out
+
+
+def run():
+    rows = []
+    fields = ge_like_fields(n=1 << 15, seed=0)
+
+    # Fig 2: progressive primary-data ladder
+    for method in METHODS:
+        dt, curve = timed(_progressive_pd_requests, fields, method)
+        final_rate = curve[-1][1]
+        mid_rate = curve[len(curve) // 2][1]
+        rows.append((f"rate_distortion/fig2/{method}", dt * 1e6,
+                     f"bitrate@mid={mid_rate:.2f};bitrate@tight={final_rate:.2f}"))
+
+    # Fig 7: single-request QoI (VTOT) per method
+    for method in METHODS:
+        arch = refactor_variables(
+            {k: fields[k] for k in ("Vx", "Vy", "Vz")}, method=method)
+        for tau in (1e-2, 1e-4, 1e-6):
+            session = arch.open()
+            dt, res = timed(retrieve_qoi_controlled, session,
+                            [QoIRequest("VTOT", ge.v_total(), tau)])
+            rows.append((f"rate_distortion/fig7/{method}/tau={tau:.0e}",
+                         dt * 1e6,
+                         f"bitrate={res.bitrate:.3f};conv={res.converged}"))
+
+    # Fig 8: S3D molar product per method
+    s3d = s3d_like_fields(shape=(33, 17, 17))
+    sub = {k: s3d[k] for k in ("x1", "x3")}
+    for method in METHODS:
+        arch = refactor_variables(sub, method=method,
+                                  mask_zero_velocity=False)
+        for tau in (1e-3, 1e-5):
+            session = arch.open()
+            dt, res = timed(retrieve_qoi_controlled, session,
+                            [QoIRequest("x1x3", Prod(Var("x1"), Var("x3")),
+                                        tau)])
+            rows.append((f"rate_distortion/fig8/{method}/tau={tau:.0e}",
+                         dt * 1e6,
+                         f"bitrate={res.bitrate:.3f};conv={res.converged}"))
+    return rows

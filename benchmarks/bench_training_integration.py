@@ -1,0 +1,47 @@
+"""Beyond-paper table: the paper's technique inside the training stack.
+
+(a) progressive checkpoint restore bytes vs tolerance (the paper's
+    rate-precision trade applied to model state), and
+(b) gradient all-reduce payload under bitplane compression vs f32.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import timed
+from repro import configs
+from repro.data.batches import make_train_batch
+from repro.models import transformer as T
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.grad_compress import payload_bytes
+
+
+def run():
+    rows = []
+    cfg = configs.get_reduced("internlm2-1.8b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    with tempfile.TemporaryDirectory() as d:
+        dt_save, rep = timed(save_checkpoint, d, params, 0)
+        rows.append(("train_integration/ckpt_save", dt_save * 1e6,
+                     f"archive_bytes={rep['bytes']}"))
+        full = None
+        for tau in (0.0, 1e-6, 1e-3, 1e-1):
+            dt, (_, r) = timed(restore_checkpoint, d, tau)
+            if full is None:
+                full = r.bytes_moved
+            rows.append((f"train_integration/ckpt_restore/tau={tau:.0e}",
+                         dt * 1e6,
+                         f"bytes={r.bytes_moved};frac_of_full="
+                         f"{r.bytes_moved / full:.3f}"))
+
+    grads = jax.tree.map(lambda p: np.zeros(p.shape, np.float32), params)
+    f32_bytes = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    for k in (16, 8, 4):
+        b = payload_bytes(grads, k)
+        rows.append((f"train_integration/grad_allreduce_payload/k={k}", 0.0,
+                     f"bytes={b};vs_f32={b / f32_bytes:.3f}"))
+    return rows

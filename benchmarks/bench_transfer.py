@@ -1,0 +1,62 @@
+"""Paper Fig 9: remote data-transfer performance under QoI error bounds.
+
+The paper measures MCC -> Anvil over Globus (effective WAN throughput
+~0.4 GB/s: 4.67 GB baseline in 11.7 s). No WAN exists in this container and
+the paper's pipeline is C++, so the reproduction splits the claim into the
+part we can measure *faithfully* and the part we must model:
+
+  * bytes_frac  — MEASURED: retrieved bytes / primary bytes. The paper's
+    headline rests on moving <27% of the bytes at QoI tolerance 1e-5, which
+    makes the transfer 1/0.27 = 3.7x faster; with their retrieval-compute
+    overhead included, 2.02x end-to-end.
+  * transfer_speedup = 1 / bytes_frac — the transfer-time gain at ANY
+    bandwidth (bandwidth cancels).
+  * retrieval overhead — MEASURED wall time of our (pure-Python/zlib)
+    retrieval per request, reported alongside; the breakeven bandwidth
+    BW* = retrieved_bytes·(1/frac - 1)/t_retr tells at which WAN speed the
+    end-to-end gain disappears for our implementation.
+"""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import ge
+from repro.core.refactor import refactor_variables
+from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
+from repro.data.synthetic import ge_like_fields
+
+BW_EFF = 400e6  # B/s effective WAN throughput (paper: 4.67GB / 11.7s)
+TAUS = (1e-1, 1e-2, 1e-3, 1e-4, 1e-5)
+
+
+def run():
+    rows = []
+    fields = ge_like_fields(n=1 << 16, seed=0)
+    vel = {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+    raw_bytes = sum(v.nbytes for v in vel.values())
+    for method in ("hb", "psz3", "psz3_delta"):
+        dt_ref, arch = timed(refactor_variables, vel, method=method)
+        # warm-up session so jit compilation does not pollute timings
+        warm = arch.open()
+        retrieve_qoi_controlled(warm, [QoIRequest("VTOT", ge.v_total(),
+                                                  1e-1)])
+        session = arch.open()
+        for tau in TAUS:
+            dt_retr, res = timed(retrieve_qoi_controlled, session,
+                                 [QoIRequest("VTOT", ge.v_total(), tau)])
+            frac = res.bytes_retrieved / raw_bytes
+            speedup = 1.0 / frac
+            t_transfer = res.bytes_retrieved / BW_EFF
+            bw_star = res.bytes_retrieved * (speedup - 1) / max(dt_retr, 1e-9)
+            rows.append((f"transfer/fig9/{method}/tau={tau:.0e}",
+                         dt_retr * 1e6,
+                         f"bytes_frac={frac:.3f};"
+                         f"transfer_speedup={speedup:.2f};"
+                         f"breakeven_BW={bw_star / 1e6:.0f}MB/s"))
+            if method == "hb" and tau == 1e-5:
+                # paper headline: 2.02x end-to-end = <27% of the bytes
+                rows.append(("transfer/fig9/headline_claim", dt_retr * 1e6,
+                             f"bytes_frac={frac:.3f};claim<0.27;"
+                             f"bytes_met={frac < 0.27};"
+                             f"transfer_speedup={speedup:.2f};"
+                             f"claim>=2.02;met={speedup >= 2.02}"))
+    return rows

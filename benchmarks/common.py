@@ -1,0 +1,29 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import numpy as np
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return dt, out
+
+
+def actual_qoi_error(expr, orig_fields, recon_fields) -> float:
+    truth = np.asarray(expr.value({k: np.asarray(v)
+                                   for k, v in orig_fields.items()}))
+    approx = np.asarray(expr.value(recon_fields))
+    return float(np.abs(truth - approx).max())
+
+
+def qoi_range(expr, fields) -> float:
+    v = np.asarray(expr.value({k: np.asarray(x) for k, x in fields.items()}))
+    r = float(v.max() - v.min())
+    return r if r > 0 else 1.0

@@ -1,0 +1,126 @@
+"""Roofline table builder (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun.json (written by repro.launch.dryrun) and derives per
+(arch × shape × mesh):
+
+  compute term    = HLO_dot_flops_per_dev / 197e12        [s]
+  memory term     = analytic_HBM_bytes_per_dev / 819e9    [s]
+                    (hlo output-bytes proxy reported alongside — it
+                     overstates TPU traffic since fused elementwise chains
+                     never hit HBM; see launch/analytic.py)
+  collective term = HLO_collective_bytes_per_dev / 50e9   [s]
+
+plus MODEL_FLOPS = 6·N(_active)·D, the useful-compute ratio, the dominant
+term, and a one-line "what would move it" note.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict, Optional
+
+from repro import configs
+from repro.launch.analytic import attention_flops, hbm_bytes, model_flops, param_counts
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import SHAPES
+
+DEFAULT_PATH = "results/dryrun.json"
+
+
+def _advice(dom: str, cfg, shape) -> str:
+    if dom == "compute":
+        if shape.kind == "train" and shape.seq_len >= 4096:
+            return ("compute-bound: reduce causal-attention waste (block-"
+                    "skip upper triangle) or drop remat on cheap layers")
+        return "compute-bound: healthy; larger per-chip batch amortises"
+    if dom == "memory":
+        if shape.kind == "decode":
+            return ("memory-bound (weights/cache streaming): quantise KV "
+                    "cache or batch more sequences per chip")
+        return "memory-bound: fuse/execute longer chains per HBM pass"
+    return ("collective-bound: overlap collectives with compute, compress "
+            "gradients (train/grad_compress.py), or reshard to cut "
+            "resharding all-gathers")
+
+
+def build_rows(results: Dict[str, Any]) -> list:
+    rows = []
+    for key, st in sorted(results.items()):
+        if st.get("status") == "skipped":
+            arch, shape_name, mesh_name = key.split("__")[:3]
+            rows.append({"cell": key, "status": "skipped",
+                         "reason": st["reason"]})
+            continue
+        if st.get("status") != "ok" or "hlo" not in st:
+            rows.append({"cell": key, "status": st.get("status", "?"),
+                         "error": str(st.get("error", ""))[:200]})
+            continue
+        arch, shape_name, mesh_name = key.split("__")[:3]
+        cfg = configs.get(arch)
+        shape = SHAPES[shape_name]
+        ndev = st["n_devices"]
+        flops_dev = st["hlo"]["dot_flops"]
+        coll_dev = st["hlo"]["collective_bytes"]
+        mem = hbm_bytes(cfg, shape, ndev)
+        t_compute = flops_dev / PEAK_FLOPS_BF16
+        t_memory = mem["total"] / HBM_BW
+        t_coll = coll_dev / ICI_BW
+        dom = max((("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll)), key=lambda kv: kv[1])[0]
+        mf = model_flops(cfg, shape)
+        af = attention_flops(cfg, shape)
+        mf_dev = mf / ndev
+        ratio = mf_dev / flops_dev if flops_dev else float("nan")
+        bound = max(t_compute, t_memory, t_coll)
+        frac = t_compute / bound if bound else 0.0
+        rows.append({
+            "cell": key, "status": "ok", "arch": arch, "shape": shape_name,
+            "mesh": mesh_name, "n_devices": ndev,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dom,
+            "roofline_fraction": frac,
+            "model_flops_total": mf, "attn_flops_total": af,
+            "hlo_flops_dev": flops_dev,
+            "useful_ratio": ratio,
+            "mem_breakdown": mem,
+            "collective_bytes_dev": coll_dev,
+            "memory_bytes_dev": {"argument": st["memory"].get("argument_bytes"),
+                                 "temp": st["memory"].get("temp_bytes"),
+                                 "hlo_proxy": st["hlo"]["memory_bytes_proxy"],
+                                 "analytic": mem["total"]},
+            "advice": _advice(dom, cfg, shape),
+        })
+    return rows
+
+
+def to_markdown(rows: list) -> str:
+    out = ["| cell | compute s | memory s | collective s | dominant | "
+           "useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['cell']} | — | — | — | {r.get('status')} "
+                       f"| — | {r.get('reason', r.get('error', ''))[:60]} |")
+            continue
+        out.append(
+            f"| {r['cell']} | {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e}"
+            f" | {r['t_collective_s']:.3e} | {r['dominant']} |"
+            f" {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def main(path: str = DEFAULT_PATH,
+         out_json: str = "results/roofline.json") -> list:
+    with open(path) as f:
+        results = json.load(f)
+    rows = build_rows(results)
+    os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(to_markdown(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

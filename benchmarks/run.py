@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+
+Prints ``name,us_per_call,derived`` CSV (one row per curve point / cell).
+Paper mapping:
+  bench_qoi_error            Figs 4/5/6   estimated vs actual QoI errors
+  bench_rate_distortion      Figs 2/7/8   bitrate vs requested error, 3 methods
+  bench_basis                Fig 3        PMGARD-OB vs -HB estimate gap
+  bench_refactor_time        Table IV     refactor + retrieval times
+  bench_transfer             Fig 9        modelled remote transfer, 2.02x claim
+  bench_kernels              (impl)       kernel hot-loop micro-benches
+  bench_training_integration (beyond)     progressive ckpt + grad compression
+Roofline/dry-run tables are built by benchmarks/roofline.py from
+results/dryrun.json (see EXPERIMENTS.md §Roofline).
+"""
+import argparse
+import sys
+import time
+
+MODULES = [
+    "bench_qoi_error",
+    "bench_rate_distortion",
+    "bench_basis",
+    "bench_refactor_time",
+    "bench_transfer",
+    "bench_kernels",
+    "bench_training_integration",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            continue
+        for row in rows:
+            nm, us, derived = row
+            print(f"{nm},{us:.1f},{derived}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

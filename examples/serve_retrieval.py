@@ -1,0 +1,9 @@
+"""Progressive-retrieval service demo with batched client requests
+(the paper-kind end-to-end driver; see src/repro/launch/serve.py).
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--n", str(1 << 15), "--requests", "12"])

@@ -1,0 +1,35 @@
+"""Train a small LM end-to-end with the paper's technique in the training
+stack: bitplane gradient compression (error feedback) + progressive
+QoI-bounded checkpointing, then a warm restart from a *partial* checkpoint.
+
+    PYTHONPATH=src python examples/train_lm_progressive.py
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ckpt_dir = os.path.join(tempfile.mkdtemp(), "ckpt")
+    print("== phase 1: train 120 steps with grad compression + progressive "
+          "checkpoints ==")
+    train_main(["--arch", "internlm2-1.8b", "--reduced",
+                "--steps", "120", "--batch", "4", "--seq", "64",
+                "--grad-compress", "8",
+                "--progressive-ckpt", ckpt_dir, "--ckpt-every", "40",
+                "--log-every", "20"])
+
+    print("\n== phase 2: warm restart from a PARTIAL restore "
+          "(tau=1e-3 — only the top bitplanes move) ==")
+    train_main(["--arch", "internlm2-1.8b", "--reduced",
+                "--steps", "160", "--batch", "4", "--seq", "64",
+                "--progressive-ckpt", ckpt_dir, "--resume",
+                "--restore-tau", "1e-3", "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

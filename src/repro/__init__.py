@@ -1,0 +1,10 @@
+"""repro: error-controlled progressive retrieval of scientific data under
+derivable QoIs (Wu et al., 2024), as a production JAX framework.
+
+Subpackages:
+  core / transform / bitplane / compressors   the paper
+  models / configs / data                     architecture zoo + pipelines
+  train / launch                              distributed substrate
+  kernels                                     Pallas TPU kernels
+"""
+__version__ = "1.0.0"

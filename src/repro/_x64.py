@@ -1,0 +1,10 @@
+"""Enable float64 for the compression/retrieval stack.
+
+Imported by repro.core / repro.transform / repro.bitplane / repro.compressors.
+Scientific data is f64 (paper Table III); the error-bound math must not be
+polluted by f32 rounding. Model code (repro.models) is explicitly dtyped and
+unaffected by this flag.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

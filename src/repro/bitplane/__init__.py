@@ -1,0 +1,12 @@
+from repro.bitplane.encoder import (
+    LevelBitplanes,
+    decode_magnitudes,
+    encode_level,
+    plane_bound,
+)
+from repro.bitplane.segments import LevelStream, PlaneSegment
+
+__all__ = [
+    "LevelBitplanes", "encode_level", "decode_magnitudes", "plane_bound",
+    "LevelStream", "PlaneSegment",
+]

@@ -1,0 +1,123 @@
+"""Sign-magnitude fixed-point bitplane encoding (progression in precision).
+
+Per coefficient group (one multilevel level of one variable):
+  * shared exponent  E = ceil(log2 max|c|)  so |c| / 2^E in [0, 1);
+  * magnitudes quantised to B-bit fixed point: mag = floor(|c| · 2^{B-E});
+  * plane b (0 = MSB) is bit (B-1-b) of every magnitude, packed 8/byte and
+    zlib-compressed (stands in for the entropy stage — MSB planes of smooth
+    data are mostly zero and compress away);
+  * one packed+compressed sign plane, charged to the first fetched plane.
+
+Retrieving the first k planes reconstructs magnitudes truncated below bit
+B-k, so the coefficient error obeys the *closed-form* bound
+
+    err(k) <= 2^{E-k} + 2^{E-B}          (truncation + quantisation)
+
+which is what the progressive reader reports to the QoI estimator. The
+device-side hot loop (extract+pack) is the `kernels/bitplane_pack` Pallas
+kernel; this module is the host/archival container.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+DEFAULT_NBITS = 48  # magnitude planes; int64-safe, ~1e-14 relative floor
+
+
+@dataclass
+class LevelBitplanes:
+    """Encoded bitplanes of one coefficient group."""
+    count: int                      # number of coefficients
+    exponent: Optional[int]        # None => group is all zeros
+    nbits: int
+    planes: List[bytes]            # zlib(packbits(plane)) MSB-first
+    plane_raw_bits: int            # uncompressed bits per plane (= count)
+    signs: bytes                   # zlib(packbits(c < 0))
+
+    def plane_nbytes(self, b: int) -> int:
+        return len(self.planes[b])
+
+    @property
+    def sign_nbytes(self) -> int:
+        return len(self.signs)
+
+    @property
+    def total_nbytes(self) -> int:
+        if self.exponent is None:
+            return 0
+        return sum(len(p) for p in self.planes) + len(self.signs)
+
+
+def encode_level(coeffs: np.ndarray, nbits: int = DEFAULT_NBITS) -> LevelBitplanes:
+    c = np.asarray(coeffs, dtype=np.float64).ravel()
+    n = c.size
+    amax = float(np.max(np.abs(c))) if n else 0.0
+    if amax == 0.0 or n == 0:
+        return LevelBitplanes(count=n, exponent=None, nbits=nbits, planes=[],
+                              plane_raw_bits=n, signs=b"")
+    e = int(np.ceil(np.log2(amax)))
+    if 2.0 ** e == amax:  # make |c|/2^E < 1 strict
+        e += 1
+    # fixed-point magnitudes; scaling by 2^(nbits-e) is exact (power of two)
+    mag = np.floor(np.abs(c) * np.float64(2.0) ** (nbits - e)).astype(np.uint64)
+    mag = np.minimum(mag, np.uint64(2 ** nbits - 1))
+    planes = []
+    for b in range(nbits):
+        bit = ((mag >> np.uint64(nbits - 1 - b)) & np.uint64(1)).astype(np.uint8)
+        planes.append(zlib.compress(np.packbits(bit).tobytes(), 1))
+    signs = zlib.compress(np.packbits(c < 0).tobytes(), 1)
+    return LevelBitplanes(count=n, exponent=e, nbits=nbits, planes=planes,
+                          plane_raw_bits=n, signs=signs)
+
+
+def decode_magnitudes(lbp: LevelBitplanes, k: int,
+                      state: Optional[np.ndarray] = None,
+                      start: int = 0) -> np.ndarray:
+    """Accumulate planes [start, k) into a uint64 magnitude state (incremental
+    recomposition — Definition 1(2))."""
+    if lbp.exponent is None:
+        return np.zeros(lbp.count, dtype=np.uint64)
+    mag = state if state is not None else np.zeros(lbp.count, dtype=np.uint64)
+    for b in range(start, min(k, lbp.nbits)):
+        bits = np.unpackbits(
+            np.frombuffer(zlib.decompress(lbp.planes[b]), dtype=np.uint8),
+            count=lbp.count).astype(np.uint64)
+        mag |= bits << np.uint64(lbp.nbits - 1 - b)
+    return mag
+
+
+def decode_values(lbp: LevelBitplanes, mag: np.ndarray) -> np.ndarray:
+    """Magnitude state + signs -> float64 coefficient values."""
+    if lbp.exponent is None:
+        return np.zeros(lbp.count, dtype=np.float64)
+    signs = np.unpackbits(
+        np.frombuffer(zlib.decompress(lbp.signs), dtype=np.uint8),
+        count=lbp.count).astype(bool)
+    vals = mag.astype(np.float64) * np.float64(2.0) ** (lbp.exponent - lbp.nbits)
+    vals[signs] *= -1.0
+    return vals
+
+
+def plane_bound(lbp: LevelBitplanes, k: int) -> float:
+    """Guaranteed |c - ĉ|_inf after retrieving the first k planes."""
+    if lbp.exponent is None:
+        return 0.0
+    k = min(k, lbp.nbits)
+    trunc = 2.0 ** (lbp.exponent - k) if k < lbp.nbits else 0.0
+    return trunc + 2.0 ** (lbp.exponent - lbp.nbits)
+
+
+def planes_needed(lbp: LevelBitplanes, eps: float) -> int:
+    """Smallest k with plane_bound(k) <= eps (nbits if unreachable)."""
+    if lbp.exponent is None:
+        return 0
+    quant = 2.0 ** (lbp.exponent - lbp.nbits)
+    if eps <= quant:
+        return lbp.nbits
+    # 2^{E-k} <= eps - quant  =>  k >= E - log2(eps - quant)
+    k = int(np.ceil(lbp.exponent - np.log2(eps - quant)))
+    return int(np.clip(k, 0, lbp.nbits))

@@ -1,0 +1,72 @@
+"""Progressive segment streams: incremental per-level plane retrieval state.
+
+A LevelStream owns the encoded planes of one coefficient group and tracks how
+many have been "moved" so far — retrieval cost is charged once per plane, and
+recomposition is incremental (newly arrived planes OR into the magnitude
+state), matching Definition 1's progressive-compressor contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.bitplane.encoder import (
+    LevelBitplanes,
+    decode_magnitudes,
+    decode_values,
+    plane_bound,
+    planes_needed,
+)
+
+
+@dataclass
+class PlaneSegment:
+    level: int
+    plane: int
+    nbytes: int
+
+
+@dataclass
+class LevelStream:
+    lbp: LevelBitplanes
+    fetched: int = 0
+    bytes_fetched: int = 0
+    _mag: Optional[np.ndarray] = None
+    _values: Optional[np.ndarray] = None
+
+    def fetch_to_planes(self, k: int) -> int:
+        """Retrieve planes up to k (MSB-first). Returns newly moved bytes."""
+        k = int(np.clip(k, 0, self.lbp.nbits))
+        if self.lbp.exponent is None or k <= self.fetched:
+            return 0
+        new_bytes = sum(self.lbp.plane_nbytes(b) for b in range(self.fetched, k))
+        if self.fetched == 0:
+            new_bytes += self.lbp.sign_nbytes  # signs ride with first plane
+        self._mag = decode_magnitudes(self.lbp, k, state=self._mag,
+                                      start=self.fetched)
+        self.fetched = k
+        self.bytes_fetched += new_bytes
+        self._values = None
+        return new_bytes
+
+    def fetch_to_eps(self, eps: float) -> int:
+        return self.fetch_to_planes(planes_needed(self.lbp, eps))
+
+    def values(self) -> np.ndarray:
+        if self._values is None:
+            mag = self._mag if self._mag is not None else np.zeros(
+                self.lbp.count, dtype=np.uint64)
+            self._values = decode_values(self.lbp, mag)
+        return self._values
+
+    @property
+    def bound(self) -> float:
+        return plane_bound(self.lbp, self.fetched)
+
+    def reset(self) -> None:
+        self.fetched = 0
+        self.bytes_fetched = 0
+        self._mag = None
+        self._values = None

@@ -1,0 +1,11 @@
+from repro.compressors.szlike import SZCompressed, sz_compress, sz_decompress
+from repro.compressors.snapshots import (
+    DeltaSnapshotArchive,
+    SnapshotArchive,
+    default_snapshot_eps,
+)
+
+__all__ = [
+    "SZCompressed", "sz_compress", "sz_decompress",
+    "SnapshotArchive", "DeltaSnapshotArchive", "default_snapshot_eps",
+]

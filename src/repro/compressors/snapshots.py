@@ -1,0 +1,130 @@
+"""Snapshot-based progressive schemes (paper §V-B categories 1 and 2).
+
+SnapshotArchive (PSZ3): the data compressed independently at a ladder of
+error bounds ε_1 > ε_2 > ... A request for ε* fetches the smallest snapshot
+with ε_i <= ε*; under *progressive* request sequences every newly-needed
+snapshot is fetched in full — the cross-snapshot redundancy the paper
+penalises in Figs 2/7/8.
+
+DeltaSnapshotArchive (PSZ3-delta, after Magri & Lindstrom): snapshot i
+compresses the *residual* against the reconstruction from snapshots < i, so
+a request for ε* fetches all first i snapshots but shares bytes across
+requests. decoded_i = Σ_{j<=i} decode_j, with |x - decoded_i|_inf <= ε_i.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.compressors.szlike import SZCompressed, sz_compress, sz_decompress
+
+
+def default_snapshot_eps(value_range: float, n: int = 10,
+                         base: float = 10.0) -> List[float]:
+    """Paper's ladder: ε_i = range · base^{-i}, i = 1..n."""
+    return [value_range * base ** (-(i + 1)) for i in range(n)]
+
+
+@dataclass
+class SnapshotArchive:
+    """PSZ3: independent snapshots at decreasing error bounds."""
+    snapshots: List[SZCompressed]          # eps strictly decreasing
+
+    @classmethod
+    def build(cls, x: np.ndarray, eps_ladder: Sequence[float]) -> "SnapshotArchive":
+        eps_sorted = sorted(set(float(e) for e in eps_ladder), reverse=True)
+        return cls(snapshots=[sz_compress(x, e) for e in eps_sorted])
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(s.nbytes for s in self.snapshots)
+
+    def open(self) -> "SnapshotReader":
+        return SnapshotReader(self)
+
+
+class SnapshotReader:
+    def __init__(self, archive: SnapshotArchive):
+        self.archive = archive
+        self.fetched = [False] * len(archive.snapshots)
+        self.bytes_fetched = 0
+        self._cache: Optional[Tuple[int, np.ndarray]] = None
+
+    def request(self, eps: float) -> Tuple[np.ndarray, float]:
+        snaps = self.archive.snapshots
+        idx = None
+        for i, s in enumerate(snaps):
+            if s.eps <= eps:
+                idx = i
+                break
+        if idx is None:
+            idx = len(snaps) - 1  # tightest available
+        # never go backwards: reuse an already-fetched tighter snapshot
+        if self._cache is not None and self._cache[0] >= idx:
+            idx = self._cache[0]
+        if not self.fetched[idx]:
+            self.bytes_fetched += snaps[idx].nbytes
+            self.fetched[idx] = True
+        if self._cache is None or self._cache[0] != idx:
+            self._cache = (idx, sz_decompress(snaps[idx]))
+        return self._cache[1], snaps[idx].safe_eps
+
+
+@dataclass
+class DeltaSnapshotArchive:
+    """PSZ3-delta: residual ladder; request(ε) needs all snapshots with
+    ε_j >= smallest satisfying ε_i."""
+    snapshots: List[SZCompressed]
+    eps_ladder: List[float]
+
+    @classmethod
+    def build(cls, x: np.ndarray,
+              eps_ladder: Sequence[float]) -> "DeltaSnapshotArchive":
+        eps_sorted = sorted(set(float(e) for e in eps_ladder), reverse=True)
+        x = np.asarray(x, dtype=np.float64)
+        snaps: List[SZCompressed] = []
+        decoded = np.zeros_like(x)
+        for e in eps_sorted:
+            snap = sz_compress(x - decoded, e)
+            snaps.append(snap)
+            decoded = decoded + sz_decompress(snap)
+        return cls(snapshots=snaps, eps_ladder=eps_sorted)
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(s.nbytes for s in self.snapshots)
+
+    def open(self) -> "DeltaSnapshotReader":
+        return DeltaSnapshotReader(self)
+
+
+class DeltaSnapshotReader:
+    def __init__(self, archive: DeltaSnapshotArchive):
+        self.archive = archive
+        self.n_fetched = 0
+        self.bytes_fetched = 0
+        self._decoded: Optional[np.ndarray] = None
+
+    def request(self, eps: float) -> Tuple[np.ndarray, float]:
+        snaps = self.archive.snapshots
+        idx = None
+        for i, s in enumerate(snaps):
+            if s.eps <= eps:
+                idx = i
+                break
+        if idx is None:
+            idx = len(snaps) - 1
+        while self.n_fetched <= idx:
+            snap = snaps[self.n_fetched]
+            self.bytes_fetched += snap.nbytes
+            delta = sz_decompress(snap)
+            self._decoded = delta if self._decoded is None \
+                else self._decoded + delta
+            self.n_fetched += 1
+        # achieved bound: tightest applied snapshot + accumulation rounding
+        base = snaps[self.n_fetched - 1]
+        import numpy as _np
+        slack = 8 * _np.finfo(_np.float64).eps * base.amax * self.n_fetched
+        return self._decoded, base.eps + slack

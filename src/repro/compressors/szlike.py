@@ -1,0 +1,138 @@
+"""SZ3-like error-bounded lossy compressor (interpolation predictor).
+
+Mirrors SZ3's interpolation-based pipeline: multilevel linear-interpolation
+prediction with *decoded-value feedback* (the decoder reproduces the encoder's
+predictions exactly), uniform quantisation with bin width 2ε, and an entropy
+stage (zlib over adaptively-narrowed integer codes). Guarantees
+|x - decode|_inf <= ε by construction of the quantiser.
+
+Used as the underlying compressor for the PSZ3 / PSZ3-delta progressive
+schemes (paper §V-B) — the paper picks SZ3 for the same role because it has
+the tightest L-inf control among snapshot compressors.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.transform.hierarchical import (
+    _new_node_mask,
+    grid_levels,
+    interp_up,
+    pad_to_grid,
+    unpad,
+)
+
+
+@dataclass
+class SZCompressed:
+    eps: float
+    orig_shape: Tuple[int, ...]
+    padded_shape: Tuple[int, ...]
+    levels: int
+    blobs: List[bytes]          # [base_codes, level L-1 codes, ..., level 0]
+    dtypes: List[str]
+    amax: float = 0.0           # max |x| (for the rounding-safe bound)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(b) for b in self.blobs) + 64  # + header
+
+    @property
+    def safe_eps(self) -> float:
+        """The quantiser guarantees eps in exact arithmetic; f64 dequant
+        rounding can exceed it by a few ulps of the value scale — the
+        REPORTED bound (what the QoI estimator consumes) includes that."""
+        import numpy as _np
+        return self.eps + 8 * _np.finfo(_np.float64).eps * self.amax
+
+
+def _quantise(resid: np.ndarray, eps: float) -> np.ndarray:
+    return np.round(resid / (2.0 * eps)).astype(np.int64)
+
+
+def _pack_codes(codes: np.ndarray) -> Tuple[bytes, str]:
+    amax = int(np.max(np.abs(codes))) if codes.size else 0
+    if amax < 2 ** 7:
+        arr = codes.astype(np.int8)
+    elif amax < 2 ** 15:
+        arr = codes.astype(np.int16)
+    elif amax < 2 ** 31:
+        arr = codes.astype(np.int32)
+    else:
+        arr = codes
+    return zlib.compress(arr.tobytes(), 1), str(arr.dtype)
+
+
+def _unpack_codes(blob: bytes, dtype: str, count: int) -> np.ndarray:
+    return np.frombuffer(zlib.decompress(blob), dtype=np.dtype(dtype),
+                         count=count).astype(np.int64)
+
+
+def sz_compress(x: np.ndarray, eps: float, max_levels: int = 32) -> SZCompressed:
+    if eps <= 0:
+        raise ValueError("eps must be positive")
+    padded, orig_shape = pad_to_grid(np.asarray(x, dtype=np.float64))
+    levels = grid_levels(padded.shape, max_levels)
+    blobs: List[bytes] = []
+    dtypes: List[str] = []
+
+    # Base grid: predict 0, quantise absolute values.
+    stride = 1 << levels
+    base_sl = tuple(slice(None, None, stride) for _ in padded.shape)
+    base = padded[base_sl]
+    codes = _quantise(base, eps)
+    blob, dt = _pack_codes(codes)
+    blobs.append(blob)
+    dtypes.append(dt)
+    decoded = np.zeros_like(padded)
+    decoded[base_sl] = codes.astype(np.float64) * (2.0 * eps)
+
+    # Fine levels, coarse -> fine, predicting from *decoded* values.
+    for l in range(levels - 1, -1, -1):
+        s = 1 << l
+        sl = tuple(slice(None, None, s) for _ in padded.shape)
+        view = padded[sl]
+        dec_view = decoded[sl]
+        pred = np.asarray(interp_up(dec_view[tuple(slice(None, None, 2)
+                                                   for _ in padded.shape)]))
+        mask = _new_node_mask(view.shape)
+        resid = np.where(mask, view - pred, 0.0)
+        codes = _quantise(resid[mask], eps)
+        blob, dt = _pack_codes(codes)
+        blobs.append(blob)
+        dtypes.append(dt)
+        dec_new = pred[mask] + codes.astype(np.float64) * (2.0 * eps)
+        dec_view = dec_view.copy()
+        dec_view[mask] = dec_new
+        decoded[sl] = dec_view
+
+    return SZCompressed(eps=float(eps), orig_shape=orig_shape,
+                        padded_shape=padded.shape, levels=levels,
+                        blobs=blobs, dtypes=dtypes,
+                        amax=float(np.max(np.abs(padded))))
+
+
+def sz_decompress(c: SZCompressed) -> np.ndarray:
+    decoded = np.zeros(c.padded_shape, dtype=np.float64)
+    stride = 1 << c.levels
+    base_sl = tuple(slice(None, None, stride) for _ in c.padded_shape)
+    base_count = int(np.prod(decoded[base_sl].shape))
+    codes = _unpack_codes(c.blobs[0], c.dtypes[0], base_count)
+    decoded[base_sl] = codes.reshape(decoded[base_sl].shape).astype(np.float64) \
+        * (2.0 * c.eps)
+    for i, l in enumerate(range(c.levels - 1, -1, -1)):
+        s = 1 << l
+        sl = tuple(slice(None, None, s) for _ in c.padded_shape)
+        dec_view = decoded[sl]
+        pred = np.asarray(interp_up(dec_view[tuple(slice(None, None, 2)
+                                                   for _ in c.padded_shape)]))
+        mask = _new_node_mask(dec_view.shape)
+        codes = _unpack_codes(c.blobs[i + 1], c.dtypes[i + 1], int(mask.sum()))
+        dec_view = dec_view.copy()
+        dec_view[mask] = pred[mask] + codes.astype(np.float64) * (2.0 * c.eps)
+        decoded[sl] = dec_view
+    return unpad(decoded, c.orig_shape)

@@ -1,0 +1,32 @@
+"""The paper's own "architecture": the progressive-retrieval pipeline
+configuration (companion to the 10 assigned LM archs — this is what the
+paper itself deploys).
+
+Defaults follow §V/§VI: PMGARD-HB refactoring, 48 magnitude bitplanes,
+c=1.5 tightening, zero-velocity outlier masks, and the PSZ3 ladders
+ε_i = range · 10^-i used for the comparison baselines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    method: str = "hb"                  # hb | ob | psz3 | psz3_delta
+    nbits: int = 48                     # magnitude bitplanes
+    reduction_factor: float = 1.5       # Alg 4's c
+    mask_zero_velocity: bool = True     # §V-A outlier bitmap
+    n_snapshots: int = 10               # PSZ3(-delta) ladder depth
+    snapshot_base: float = 10.0         # ε_i = range · base^-i
+    max_iters: int = 100
+    tight_estimators: bool = False      # beyond-paper exact-sup √ bound
+
+
+def config() -> PipelineConfig:
+    return PipelineConfig()
+
+
+def reduced_config() -> PipelineConfig:
+    return PipelineConfig(nbits=32, n_snapshots=4, max_iters=20)

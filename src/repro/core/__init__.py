@@ -1,0 +1,39 @@
+# The paper's primary contribution: error-controlled progressive retrieval
+# under derivable quantities of interest (QoIs).
+#
+# The compression/retrieval pipeline operates on float64 scientific data, so
+# importing repro.core enables x64. Model code (repro.models) is explicitly
+# dtyped everywhere and is unaffected.
+import repro._x64  # noqa: F401
+
+from repro.core import estimators  # noqa: E402
+from repro.core.qoi import (  # noqa: E402
+    Const,
+    Expr,
+    IntPow,
+    Prod,
+    Quot,
+    Radical,
+    Sqrt,
+    Sum,
+    Var,
+    frac_pow,
+    magnitude,
+    scale,
+    square,
+)
+from repro.core.retrieval import (  # noqa: E402
+    QoIRequest,
+    RetrievalResult,
+    assign_eb,
+    retrieve_qoi_controlled,
+)
+from repro.core.refactor import refactor_variables  # noqa: E402
+
+__all__ = [
+    "estimators",
+    "Expr", "Var", "Const", "Sum", "Prod", "Quot", "IntPow", "Sqrt", "Radical",
+    "scale", "square", "magnitude", "frac_pow",
+    "QoIRequest", "RetrievalResult", "assign_eb", "retrieve_qoi_controlled",
+    "refactor_variables",
+]

@@ -1,0 +1,48 @@
+"""Mask-based outlier management (paper §V-A).
+
+Points whose values make QoI bounds blow up (e.g. Vx=Vy=Vz=0 under the sqrt
+in Vtotal, or zero divisors under Thm 3/6 guards) are recorded in a bitmap at
+refactor time, stored losslessly (they are exact), and excluded from both the
+progressive encoding and the error estimation. Bitmap storage cost is
+accounted at 1 bit/element plus the raw values of the masked points.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+import numpy as np
+
+
+@dataclass
+class OutlierMask:
+    """Bitmap of exactly-stored points for one variable."""
+    mask: np.ndarray            # bool, True = outlier (stored exactly)
+    values: np.ndarray          # the exact values at masked positions
+
+    @property
+    def nbytes(self) -> int:
+        # 1 bit per element for the bitmap + exact values.
+        return (self.mask.size + 7) // 8 + self.values.nbytes
+
+    def apply(self, data: np.ndarray) -> np.ndarray:
+        """Overwrite masked positions of ``data`` with the exact values."""
+        out = np.array(data, copy=True)
+        out[self.mask] = self.values
+        return out
+
+
+def build_zero_velocity_mask(fields: Dict[str, np.ndarray],
+                             names: Sequence[str] = ("Vx", "Vy", "Vz"),
+                             atol: float = 0.0) -> Dict[str, OutlierMask]:
+    """Mask points where all velocity components are (near) zero — these are
+    wall/boundary nodes in the GE data whose tiny reconstructed values would
+    make the sqrt bound (Thm 2) arbitrarily loose."""
+    present = [n for n in names if n in fields]
+    if not present:
+        return {}
+    zero = np.ones_like(np.asarray(fields[present[0]], dtype=bool))
+    for n in present:
+        zero &= np.abs(np.asarray(fields[n])) <= atol
+    return {n: OutlierMask(mask=zero.copy(), values=np.asarray(fields[n])[zero])
+            for n in present}

@@ -1,0 +1,304 @@
+"""Algorithm 1: GENERAL DATA REFACTOR — variables -> progressive archives.
+
+Supported progressive representations (paper §V-B):
+  * "hb"         PMGARD-HB: hierarchical-basis multilevel + bitplanes (paper's
+                 preferred method — tight Σ_l e_l bound)
+  * "ob"         PMGARD (orthogonal basis): + L² projection, loose bound
+  * "psz3"       multi-snapshot SZ3-like ladder
+  * "psz3_delta" residual-ladder SZ3-like
+
+Every representation satisfies Definition 1: refactor into segments, then
+reconstruct from a prefix with a *guaranteed, reported* L-inf bound. The
+retrieval session gives a uniform interface to the QoI-preserved retrieval
+loop (core/retrieval.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.bitplane.encoder import LevelBitplanes, encode_level
+from repro.bitplane.segments import LevelStream
+from repro.compressors.snapshots import (
+    DeltaSnapshotArchive,
+    SnapshotArchive,
+    default_snapshot_eps,
+)
+from repro.core.masks import OutlierMask, build_zero_velocity_mask
+from repro.transform.hierarchical import (
+    decompose_hb,
+    grid_levels,
+    level_map,
+    pad_to_grid,
+    recompose_hb,
+    unpad,
+)
+from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
+
+METHODS = ("hb", "ob", "psz3", "psz3_delta")
+
+
+# ---------------------------------------------------------------------------
+# Per-variable archives
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BitplaneVarArchive:
+    """PMGARD-HB/OB: per-level bitplane groups over the multilevel transform."""
+    method: str                    # "hb" | "ob"
+    orig_shape: Tuple[int, ...]
+    padded_shape: Tuple[int, ...]
+    levels: int
+    groups: List[LevelBitplanes]   # detail levels 0..L-1, then base (index L)
+    group_indices: List[np.ndarray]
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(g.total_nbytes for g in self.groups)
+
+
+@dataclass
+class SnapshotVarArchive:
+    archive: object                # SnapshotArchive | DeltaSnapshotArchive
+
+    @property
+    def total_nbytes(self) -> int:
+        return self.archive.total_nbytes
+
+
+@dataclass
+class Archive:
+    """Refactored multi-precision segments + metadata for all variables."""
+    method: str
+    variables: Dict[str, object]
+    masks: Dict[str, OutlierMask]
+    ranges: Dict[str, float]
+    shapes: Dict[str, Tuple[int, ...]]
+
+    @property
+    def total_nbytes(self) -> int:
+        n = sum(v.total_nbytes for v in self.variables.values())
+        n += sum(m.nbytes for m in self.masks.values())
+        return n
+
+    def open(self) -> "RetrievalSession":
+        return RetrievalSession(self)
+
+    def n_elements(self, name: str) -> int:
+        return int(np.prod(self.shapes[name]))
+
+
+def refactor_variables(fields: Dict[str, np.ndarray],
+                       method: str = "hb",
+                       nbits: int = 48,
+                       max_levels: int = 32,
+                       snapshot_eps: Optional[Sequence[float]] = None,
+                       n_snapshots: int = 10,
+                       mask_zero_velocity: bool = True) -> Archive:
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    masks = build_zero_velocity_mask(fields) if mask_zero_velocity else {}
+    variables: Dict[str, object] = {}
+    ranges: Dict[str, float] = {}
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    for name, data in fields.items():
+        data = np.asarray(data, dtype=np.float64)
+        shapes[name] = data.shape
+        rng = float(np.max(data) - np.min(data))
+        ranges[name] = rng if rng > 0 else 1.0
+        if method in ("hb", "ob"):
+            variables[name] = _build_bitplane_var(data, method, nbits, max_levels)
+        else:
+            ladder = list(snapshot_eps) if snapshot_eps is not None else \
+                default_snapshot_eps(ranges[name], n=n_snapshots)
+            if method == "psz3":
+                variables[name] = SnapshotVarArchive(
+                    SnapshotArchive.build(data, ladder))
+            else:
+                variables[name] = SnapshotVarArchive(
+                    DeltaSnapshotArchive.build(data, ladder))
+    return Archive(method=method, variables=variables, masks=masks,
+                   ranges=ranges, shapes=shapes)
+
+
+def _build_bitplane_var(data: np.ndarray, method: str, nbits: int,
+                        max_levels: int) -> BitplaneVarArchive:
+    padded, orig_shape = pad_to_grid(data)
+    levels = grid_levels(padded.shape, max_levels)
+    transform = decompose_hb if method == "hb" else decompose_ob
+    coeffs = np.asarray(transform(padded, levels))
+    lmap = level_map(padded.shape, levels).ravel()
+    flat = coeffs.ravel()
+    groups, indices = [], []
+    for l in range(levels + 1):          # details 0..L-1, base = L
+        idx = np.flatnonzero(lmap == l)
+        groups.append(encode_level(flat[idx], nbits=nbits))
+        indices.append(idx)
+    return BitplaneVarArchive(method=method, orig_shape=orig_shape,
+                              padded_shape=padded.shape, levels=levels,
+                              groups=groups, group_indices=indices)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval session (uniform progressive-reader interface)
+# ---------------------------------------------------------------------------
+
+
+class _BitplaneVarReader:
+    def __init__(self, var: BitplaneVarArchive):
+        self.var = var
+        self.streams = [LevelStream(g) for g in var.groups]
+        self._recon: Optional[np.ndarray] = None
+        self._dirty = True
+
+    def reconstruct_at_resolution(self, coarsen: int,
+                                  eps: float) -> Tuple[np.ndarray, float]:
+        """Progression in RESOLUTION (paper §II): reconstruct the 2^coarsen-
+        strided sub-grid by fetching only the coarser level groups — detail
+        levels 0..coarsen-1 (the finest) are never moved. Returns the
+        coarse field (strided shape) and its achieved L-inf bound relative
+        to the true coarse-grid values."""
+        if self.var.method != "hb":
+            # OB's L² corrections mix finer details into coarse nodal
+            # values, so a truncated reconstruction is not the nodal
+            # sub-grid — HB's level independence is what enables this.
+            raise ValueError("resolution progression requires method='hb'")
+        levels = self.var.levels
+        coarsen = int(np.clip(coarsen, 0, levels))
+        active = list(range(coarsen, levels + 1))   # coarser details + base
+        budgets = self._budgets(eps)
+        for l in active:
+            if self.streams[l].fetch_to_eps(budgets[l]):
+                self._dirty = True
+        flat = np.zeros(int(np.prod(self.var.padded_shape)), dtype=np.float64)
+        for l in active:
+            flat[self.var.group_indices[l]] = self.streams[l].values()
+        rec = np.asarray(recompose_hb(flat.reshape(self.var.padded_shape),
+                                      levels))
+        full = unpad(rec, self.var.orig_shape)
+        coarse = full[tuple(slice(None, None, 1 << coarsen)
+                            for _ in self.var.orig_shape)]
+        # bound on the sub-grid: HB coarse nodes never receive finer-level
+        # contributions, so only the active groups' bounds apply
+        achieved = float(np.sum([self.streams[l].bound for l in active]))
+        return coarse, achieved
+
+    @property
+    def bytes_fetched(self) -> int:
+        return sum(s.bytes_fetched for s in self.streams)
+
+    def _budgets(self, eps: float) -> List[float]:
+        """Split the variable's L-inf budget across coefficient groups so the
+        method's composition bound meets eps.
+
+        The split is *size-weighted* (§Perf): minimising total plane bits
+        Σ_l n_l·(E_l − log2 e_l) subject to Σ_l e_l <= eps gives
+        e_l ∝ n_l — the finest level (half the elements) deserves ~half the
+        budget; the equal split overspends ~log2(L/2) planes on it.
+        OB additionally divides detail budgets by (1+κ) per its bound."""
+        counts = np.asarray([g.count for g in self.var.groups], dtype=float)
+        weights = counts / counts.sum()
+        if self.var.method == "hb":
+            return [eps * w for w in weights]
+        kappa = ob_kappa(len(self.var.padded_shape))
+        out = [eps * w / (1.0 + kappa) for w in weights[:-1]]
+        return out + [eps * weights[-1]]
+
+    def achieved_bound(self) -> float:
+        bounds = [s.bound for s in self.streams]
+        if self.var.method == "hb":
+            return float(np.sum(bounds))
+        kappa = ob_kappa(len(self.var.padded_shape))
+        return float((1.0 + kappa) * np.sum(bounds[:-1]) + bounds[-1])
+
+    def request(self, eps: float) -> Tuple[np.ndarray, float]:
+        for s, budget in zip(self.streams, self._budgets(eps)):
+            if s.fetch_to_eps(budget):
+                self._dirty = True
+        if self._dirty or self._recon is None:
+            flat = np.zeros(int(np.prod(self.var.padded_shape)), dtype=np.float64)
+            for s, idx in zip(self.streams, self.var.group_indices):
+                flat[idx] = s.values()
+            recompose = recompose_hb if self.var.method == "hb" else recompose_ob
+            rec = np.asarray(recompose(flat.reshape(self.var.padded_shape),
+                                       self.var.levels))
+            self._recon = unpad(rec, self.var.orig_shape)
+            self._dirty = False
+        return self._recon, self.achieved_bound()
+
+
+class _SnapshotVarReader:
+    def __init__(self, var: SnapshotVarArchive):
+        self.reader = var.archive.open()
+
+    @property
+    def bytes_fetched(self) -> int:
+        return self.reader.bytes_fetched
+
+    def request(self, eps: float) -> Tuple[np.ndarray, float]:
+        return self.reader.request(eps)
+
+
+class RetrievalSession:
+    """Progressive, stateful reader over all variables of an Archive."""
+
+    def __init__(self, archive: Archive):
+        self.archive = archive
+        self.readers: Dict[str, object] = {}
+        self._mask_charged: Dict[str, bool] = {}
+        for name, var in archive.variables.items():
+            if isinstance(var, BitplaneVarArchive):
+                self.readers[name] = _BitplaneVarReader(var)
+            else:
+                self.readers[name] = _SnapshotVarReader(var)
+            self._mask_charged[name] = False
+        self._mask_bytes = 0
+
+    @property
+    def bytes_retrieved(self) -> int:
+        return sum(r.bytes_fetched for r in self.readers.values()) \
+            + self._mask_bytes
+
+    def reconstruct(self, name: str, eps: float) -> Tuple[np.ndarray, float]:
+        """Reconstruct variable to L-inf bound <= eps; returns the data (with
+        outlier-masked points exact) and the achieved bound."""
+        data, achieved = self.readers[name].request(eps)
+        mask = self.archive.masks.get(name)
+        if mask is not None:
+            if not self._mask_charged[name]:
+                self._mask_bytes += mask.nbytes
+                self._mask_charged[name] = True
+            data = mask.apply(data)
+        return data, achieved
+
+    def reconstruct_at_resolution(self, name: str, coarsen: int,
+                                  eps: float) -> Tuple[np.ndarray, float]:
+        """Progression in resolution (paper §II): the 2^coarsen-strided
+        sub-grid with an L-inf guarantee, moving only coarse-level segments
+        (PMGARD-HB archives only)."""
+        reader = self.readers[name]
+        if not isinstance(reader, _BitplaneVarReader):
+            raise ValueError("resolution progression requires a bitplane "
+                             "(hb) archive")
+        data, achieved = reader.reconstruct_at_resolution(coarsen, eps)
+        return data, achieved
+
+    def eb_array(self, name: str, achieved: float) -> np.ndarray:
+        """Per-point error-bound array: achieved everywhere, 0 at exact
+        (masked) points."""
+        eb = np.full(self.archive.shapes[name], achieved, dtype=np.float64)
+        mask = self.archive.masks.get(name)
+        if mask is not None:
+            eb[mask.mask] = 0.0
+        return eb
+
+    def bitrate(self, names: Optional[Sequence[str]] = None) -> float:
+        """Bits per element over the referenced variables (paper §III-C)."""
+        names = list(names) if names is not None else list(self.readers)
+        n_elems = sum(self.archive.n_elements(n) for n in names)
+        rbytes = sum(self.readers[n].bytes_fetched for n in names) \
+            + self._mask_bytes
+        return 8.0 * rbytes / max(n_elems, 1)

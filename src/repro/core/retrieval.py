@@ -1,0 +1,195 @@
+"""Algorithms 2-4: QoI-preserved progressive data retrieval.
+
+The loop iteratively refines the reconstruction until the *estimated* QoI
+error bounds (Section IV theory — no ground truth needed) drop below the
+requested tolerances:
+
+  1. assign_eb (Alg 3): initial per-variable bounds from the requested
+     relative QoI tolerances and the variables' value ranges.
+  2. reconstruct every involved variable to its current bound (progressive —
+     only new segments move).
+  3. estimate each QoI's error upper bound on the reconstruction; done when
+     all max bounds <= τ_abs.
+  4. reassign_eb (Alg 4): at the worst point of the worst QoI, tighten the
+     involved variables' bounds by c=1.5 until the *point* estimate clears
+     the tolerance, then loop.
+
+τ is relative to the QoI's value range (paper §III-C); the range is taken
+from the current reconstruction and refreshed every round (ground truth is
+unattainable mid-retrieval).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qoi import Expr
+
+REDUCTION_FACTOR = 1.5          # c in Alg 4
+MIN_REL_EPS = 2.0 ** -60        # full-fidelity floor
+
+
+@dataclass
+class QoIRequest:
+    name: str
+    expr: Expr
+    tau_rel: float
+
+
+@dataclass
+class IterationLog:
+    iteration: int
+    eps: Dict[str, float]
+    est_errors: Dict[str, float]
+    tau_abs: Dict[str, float]
+    bytes_retrieved: int
+
+
+@dataclass
+class RetrievalResult:
+    values: Dict[str, np.ndarray]
+    achieved_eb: Dict[str, float]
+    est_errors: Dict[str, float]
+    tau_abs: Dict[str, float]
+    bytes_retrieved: int
+    bitrate: float
+    iterations: List[IterationLog]
+    converged: bool
+
+
+def assign_eb(requests: Sequence[QoIRequest],
+              ranges: Dict[str, float]) -> Dict[str, float]:
+    """Algorithm 3: per-variable initial bound = min relative tolerance among
+    the QoIs involving the variable, times the variable's range."""
+    eps: Dict[str, float] = {}
+    for req in requests:
+        for v in req.expr.variables():
+            rel = min(1.0, req.tau_rel)
+            eps[v] = min(eps.get(v, 1.0), rel)
+    return {v: e * ranges[v] for v, e in eps.items()}
+
+
+_JIT_CACHE: Dict[tuple, "jax.stages.Wrapped"] = {}
+
+
+def _estimate(expr: Expr, values: Dict[str, np.ndarray],
+              ebs: Dict[str, np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """Jit-compiled (value, bound) evaluation, cached per (expr, shapes) —
+    eager dispatch of the estimator graph dominated retrieval wall time
+    (§Perf: ~2x end-to-end on the GE pipeline)."""
+    names = tuple(sorted(values))
+    shapes = tuple(np.shape(values[k]) for k in names)
+    key = (expr, names, shapes)   # Expr nodes hash structurally
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(lambda vals, eb: expr.eval(vals, eb))
+        _JIT_CACHE[key] = fn
+    val, bound = fn({k: jnp.asarray(values[k]) for k in names},
+                    {k: jnp.asarray(ebs[k]) for k in names})
+    return np.asarray(val), np.asarray(bound)
+
+
+def retrieve_qoi_controlled(session,
+                            requests: Sequence[QoIRequest],
+                            max_iters: int = 100,
+                            reduction: float = REDUCTION_FACTOR,
+                            verbose: bool = False) -> RetrievalResult:
+    """Algorithm 2 main loop over a RetrievalSession."""
+    ranges = session.archive.ranges
+    needed = sorted(set().union(*[r.expr.variables() for r in requests]))
+    for v in needed:
+        if v not in session.readers:
+            raise KeyError(f"QoI references unknown variable {v!r}")
+    eps = assign_eb(requests, ranges)
+    floors = {v: MIN_REL_EPS * ranges[v] for v in needed}
+    logs: List[IterationLog] = []
+    values: Dict[str, np.ndarray] = {}
+    eb_arrays: Dict[str, np.ndarray] = {}
+    achieved: Dict[str, float] = {}
+    converged = False
+
+    for it in range(max_iters):
+        # -- progressive reconstruction at current bounds (lines 9-11)
+        for v in needed:
+            data, ach = session.reconstruct(v, eps[v])
+            values[v] = data
+            achieved[v] = ach
+            eb_arrays[v] = session.eb_array(v, ach)
+
+        # -- QoI error estimation (lines 12-24)
+        est_errors: Dict[str, float] = {}
+        tau_abs: Dict[str, float] = {}
+        worst: Optional[Tuple[str, int, float]] = None  # (qoi, flat idx, excess)
+        bounds_cache: Dict[str, np.ndarray] = {}
+        for req in requests:
+            val, bound = _estimate(req.expr, values, eb_arrays)
+            rng = float(np.max(val) - np.min(val))
+            t_abs = req.tau_rel * (rng if rng > 0 else 1.0)
+            max_err = float(np.max(bound))
+            est_errors[req.name] = max_err
+            tau_abs[req.name] = t_abs
+            bounds_cache[req.name] = bound
+            if max_err > t_abs:
+                idx = int(np.argmax(bound))
+                excess = max_err / t_abs if np.isfinite(max_err) else np.inf
+                if worst is None or excess > worst[2]:
+                    worst = (req.name, idx, excess)
+
+        logs.append(IterationLog(iteration=it, eps=dict(eps),
+                                 est_errors=dict(est_errors),
+                                 tau_abs=dict(tau_abs),
+                                 bytes_retrieved=session.bytes_retrieved))
+        if verbose:
+            print(f"[retrieve] iter={it} bytes={session.bytes_retrieved} "
+                  f"est={ {k: f'{v:.3e}' for k, v in est_errors.items()} }")
+
+        if worst is None:
+            converged = True
+            break
+
+        # -- reassign_eb (Alg 4): tighten on the worst point
+        qname, idx, _ = worst
+        req = next(r for r in requests if r.name == qname)
+        involved = sorted(req.expr.variables())
+        pt_vals = {v: values[v].ravel()[idx] for v in involved}
+        pt_ebs = {v: min(achieved[v], eps[v]) for v in involved}
+        # honour exact (masked) points
+        for v in involved:
+            pt_ebs[v] = float(eb_arrays[v].ravel()[idx]) if \
+                eb_arrays[v].ravel()[idx] == 0.0 else pt_ebs[v]
+        at_floor = False
+        for _ in range(200):
+            _, pb = _estimate(req.expr, pt_vals,
+                              {v: np.asarray(pt_ebs[v]) for v in involved})
+            if float(pb) <= tau_abs[qname]:
+                break
+            progressed = False
+            for v in involved:
+                if pt_ebs[v] > floors[v]:
+                    pt_ebs[v] = max(pt_ebs[v] / reduction, floors[v])
+                    progressed = True
+            if not progressed:
+                at_floor = True
+                break
+        for v in involved:
+            eps[v] = min(eps[v], pt_ebs[v]) if pt_ebs[v] > 0 else eps[v]
+        if at_floor:
+            # full fidelity reached and still unbounded -> retrieve all and stop
+            for v in involved:
+                eps[v] = floors[v]
+            for v in needed:
+                data, ach = session.reconstruct(v, eps[v])
+                values[v], achieved[v] = data, ach
+                eb_arrays[v] = session.eb_array(v, ach)
+            break
+
+    bitrate = session.bitrate(needed)
+    return RetrievalResult(values=values, achieved_eb=achieved,
+                           est_errors=est_errors, tau_abs=tau_abs,
+                           bytes_retrieved=session.bytes_retrieved,
+                           bitrate=bitrate, iterations=logs,
+                           converged=converged)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    ge_like_fields,
+    nyx_like_fields,
+    s3d_like_fields,
+    smooth_field,
+)
+
+__all__ = ["smooth_field", "ge_like_fields", "nyx_like_fields", "s3d_like_fields"]

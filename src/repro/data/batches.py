@@ -1,0 +1,49 @@
+"""Batch construction for the model zoo (synthetic token pipeline) and
+ShapeDtypeStruct input_specs for the dry-run (no allocation)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+def make_train_batch(cfg: ModelConfig, batch: int, seq: int,
+                     seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Real (allocated) batch for smoke tests / the small trainer."""
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab, size=(batch, seq), dtype=np.int32)
+    labels = np.roll(tokens, -1, axis=1).astype(np.int32)
+    labels[:, -1] = -1  # no target for final position
+    out = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every train/prefill input — weak-type
+    correct, shardable, no device allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_token_spec(cfg: ModelConfig, shape: ShapeSpec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots of the paper's pipeline:
+#   bitplane_pack   - refactor hot loop: extract+pack bitplanes (VPU/MXU)
+#   hier_level      - one deinterleaved hierarchical-surplus lifting level
+#   qoi_vtotal      - retrieval hot loop: fused Vtotal value+bound evaluation
+#
+# Each kernel is written for TPU (pl.pallas_call + explicit BlockSpec VMEM
+# tiling, 128-lane aligned) and validated on CPU in interpret mode against
+# the pure-jnp oracles in ref.py via the jit wrappers in ops.py.

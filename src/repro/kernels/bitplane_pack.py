@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: bitplane extraction + packing (the refactor hot loop).
+
+TPU adaptation of the paper's scalar bit loop (DESIGN.md §3): magnitudes are
+int32 fixed point; plane b of a tile is ``(mag >> (B-1-b)) & 1``; 32 lanes
+are packed into one uint32 by a dot with the power-of-two vector — a dense
+VPU/MXU-friendly formulation with no data-dependent control flow.
+
+Tile layout: input (ROWS, 128) int32 in VMEM; output (B, ROWS, 4) uint32
+(4 packed words per 128-lane row). ROWS=8 keeps the working set at
+8·128·4B (in) + B·8·4·4B (out) « 16 MiB VMEM, and both dims are
+(8, 128)-register aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+WORDS_PER_ROW = LANES // 32   # 4 uint32 words per 128-lane row
+DEFAULT_ROWS = 8
+
+
+def _kernel(nbits: int, mag_ref, out_ref):
+    mag = mag_ref[...]                                  # (ROWS, 128) int32
+    rows = mag.shape[0]
+    pow2 = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))  # (32,)
+    grouped_shape = (rows, WORDS_PER_ROW, 32)
+    for b in range(nbits):                               # static unroll
+        bits = (mag >> (nbits - 1 - b)) & 1              # (ROWS, 128) int32
+        g = bits.astype(jnp.uint32).reshape(grouped_shape)
+        packed = jnp.sum(g * pow2[None, None, :], axis=-1,
+                         dtype=jnp.uint32)               # (ROWS, 4)
+        out_ref[b, :, :] = packed
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "rows", "interpret"))
+def bitplane_pack(mag: jnp.ndarray, nbits: int = 30,
+                  rows: int = DEFAULT_ROWS,
+                  interpret: bool = True) -> jnp.ndarray:
+    """mag: (N,) int32 non-negative magnitudes, N % (rows*128) == 0.
+    Returns (nbits, N // 32) uint32 packed planes, MSB plane first."""
+    n = mag.shape[0]
+    if n % (rows * LANES):
+        raise ValueError(f"N={n} must be a multiple of rows*128={rows * LANES}")
+    tiles = n // (rows * LANES)
+    mag2d = mag.reshape(tiles * rows, LANES)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nbits),
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((nbits, rows, WORDS_PER_ROW),
+                               lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbits, tiles * rows, WORDS_PER_ROW),
+                                       jnp.uint32),
+        interpret=interpret,
+    )(mag2d)
+    return out.reshape(nbits, n // 32)

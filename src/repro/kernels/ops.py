@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation. On a real TPU backend
+``interpret`` flips to False automatically and the same BlockSpecs drive
+Mosaic compilation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitplane_pack import bitplane_pack
+from repro.kernels.hier_level import hier_level_surplus
+from repro.kernels.qoi_vtotal import qoi_vtotal_fused
+
+LANES = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, value=0):
+    n = x.shape[0]
+    rem = (-n) % mult
+    if rem == 0:
+        return x, n
+    return jnp.pad(x, (0, rem), constant_values=value), n
+
+
+def pack_bitplanes(mag: jnp.ndarray, nbits: int = 30,
+                   rows: int = 8) -> jnp.ndarray:
+    """Arbitrary-length (N,) int32 -> (nbits, ceil32(N)) packed planes.
+    Pads with zeros (zero magnitudes contribute zero bits)."""
+    mag = jnp.asarray(mag, jnp.int32)
+    padded, n = _pad_to(mag, rows * LANES)
+    out = bitplane_pack(padded, nbits=nbits, rows=rows,
+                        interpret=_interpret())
+    return out[:, : (n + 31) // 32]
+
+
+def level_surplus(x_even: jnp.ndarray, x_odd: jnp.ndarray,
+                  rows: int = 8) -> jnp.ndarray:
+    """Batched 1D surplus with automatic row padding."""
+    b = x_odd.shape[0]
+    rem = (-b) % rows
+    if rem:
+        x_even = jnp.pad(x_even, ((0, rem), (0, 0)))
+        x_odd = jnp.pad(x_odd, ((0, rem), (0, 0)))
+    out = hier_level_surplus(x_even, x_odd, rows=rows,
+                             interpret=_interpret())
+    return out[:b]
+
+
+def vtotal_with_bound(vx: jnp.ndarray, vy: jnp.ndarray, vz: jnp.ndarray,
+                      eps: jnp.ndarray, rows: int = 8):
+    """Fused Vtotal (value, Thm-2 bound) for flat arrays of any length."""
+    n = vx.shape[0]
+    vx, _ = _pad_to(vx, rows * LANES)
+    vy, _ = _pad_to(vy, rows * LANES)
+    vz, _ = _pad_to(vz, rows * LANES)
+    val, bound = qoi_vtotal_fused(vx, vy, vz, jnp.asarray(eps), rows=rows,
+                                  interpret=_interpret())
+    return val[:n], bound[:n]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitplane_pack_ref(mag: jnp.ndarray, nbits: int = 30) -> jnp.ndarray:
+    """(N,) int32 -> (nbits, N//32) uint32 packed planes, MSB first."""
+    n = mag.shape[0]
+    planes = []
+    pow2 = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    for b in range(nbits):
+        bits = ((mag >> (nbits - 1 - b)) & 1).astype(jnp.uint32)
+        packed = jnp.sum(bits.reshape(n // 32, 32) * pow2[None, :], axis=-1,
+                         dtype=jnp.uint32)
+        planes.append(packed)
+    return jnp.stack(planes)
+
+
+def hier_level_surplus_ref(x_even: jnp.ndarray,
+                           x_odd: jnp.ndarray) -> jnp.ndarray:
+    return x_odd - 0.5 * (x_even[:, :-1] + x_even[:, 1:])
+
+
+def qoi_vtotal_ref(vx, vy, vz, eps):
+    ex, ey, ez = eps[0], eps[1], eps[2]
+    s = vx * vx + vy * vy + vz * vz
+    eps_s = (2.0 * jnp.abs(vx) * ex + ex * ex
+             + 2.0 * jnp.abs(vy) * ey + ey * ey
+             + 2.0 * jnp.abs(vz) * ez + ez * ez)
+    s = jnp.maximum(s, 0.0)
+    val = jnp.sqrt(s)
+    denom = jnp.sqrt(jnp.maximum(s - eps_s, 0.0)) + val
+    safe = jnp.where(denom > 0, denom, 1.0)
+    bound = jnp.where(denom > 0, eps_s / safe, jnp.inf)
+    return val, bound

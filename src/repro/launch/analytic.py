@@ -1,0 +1,156 @@
+"""Analytic FLOPs / HBM-traffic model per (arch × shape) cell.
+
+Two uses in the roofline (EXPERIMENTS.md §Roofline):
+  * MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) — the "useful" flops;
+    the ratio MODEL_FLOPS / HLO_dot_flops exposes remat/attention/dispatch
+    overheads in the compiled program.
+  * memory term: the HLO output-bytes proxy from hlo_analysis.py counts
+    every instruction output — on TPU most elementwise chains fuse, so that
+    proxy overstates HBM traffic badly. This module provides the standard
+    napkin model instead: weights/optimizer traffic + activation
+    checkpoint traffic + logits + KV-cache traffic, per device.
+
+Parameter counts are EXACT (jax.eval_shape over init_params); only the
+traffic model is analytic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeSpec
+
+_BYTES = {"bfloat16": 2, "float32": 4, "float16": 2}
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    """Exact parameter counts: total, embedding, expert, active."""
+    shapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    total = 0
+    embed = 0
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "embed/table" in path or path.endswith("lm_head"):
+            embed += n
+        if "/moe/" in path and ("wg" in path or "wu" in path or "wd" in path) \
+                and "shared" not in path:
+            expert += n
+    active = total - embed - expert
+    if cfg.n_experts:
+        active += expert * cfg.top_k / cfg.n_experts
+    # lm_head matmul does participate per token
+    head = cfg.d_model * cfg.vocab
+    return {"total": float(total), "embed": float(embed),
+            "expert": float(expert), "active": float(active),
+            "head": float(head)}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N_active·D + lm_head (decode counts one token per sequence)."""
+    counts = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence per step
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * (counts["active"] + counts["head"]) * tokens
+
+
+def attention_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Quadratic attention term (full-T computation incl. causal waste)."""
+    if cfg.family == "ssm":
+        # SSD: intra-chunk quadratic + state updates
+        q = cfg.ssm_chunk
+        if shape.kind == "decode":
+            return 2.0 * shape.global_batch * cfg.n_layers * \
+                cfg.ssm_heads * cfg.ssm_state * cfg.ssm_headdim * 3
+        tokens = shape.global_batch * shape.seq_len
+        per_tok = 2 * q * cfg.ssm_heads * cfg.ssm_headdim \
+            + 4 * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_headdim
+        f = tokens * cfg.n_layers * per_tok
+        return f * (3 if shape.kind == "train" else 1)
+    n_attn_layers = cfg.n_layers if cfg.family != "hybrid" else \
+        (cfg.n_layers // max(cfg.shared_attn_period, 1))
+    if cfg.family == "encdec":
+        n_attn_layers = cfg.n_layers * 2 + cfg.n_encoder_layers
+    hd, h = cfg.hd, max(cfg.n_heads, 1)
+    if shape.kind == "decode":
+        # one token attends to the full cache
+        f = 4.0 * shape.global_batch * shape.seq_len * h * hd * n_attn_layers
+        if cfg.family == "hybrid":
+            f += 2.0 * shape.global_batch * cfg.n_layers * \
+                cfg.ssm_heads * cfg.ssm_state * cfg.ssm_headdim * 3
+        return f
+    tokens = shape.global_batch * shape.seq_len
+    f = 4.0 * tokens * shape.seq_len * h * hd * n_attn_layers
+    if cfg.family in ("hybrid",):
+        q = cfg.ssm_chunk
+        per_tok = 2 * q * cfg.ssm_heads * cfg.ssm_headdim \
+            + 4 * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_headdim
+        f += tokens * cfg.n_layers * per_tok
+    return f * (3 if shape.kind == "train" else 1)
+
+
+def hbm_bytes(cfg: ModelConfig, shape: ShapeSpec, n_devices: int,
+              kv_cache_gb: float = 0.0) -> Dict[str, float]:
+    """Per-device HBM traffic model for one step."""
+    counts = param_counts(cfg)
+    wbytes = _BYTES.get(cfg.param_dtype, 2)
+    p_dev = counts["total"] * wbytes / n_devices
+    d = cfg.d_model
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        # weights: fwd read + remat re-read + bwd read; grads write+read;
+        # optimizer: m,v read+write (f32) + param write
+        opt_mult = 16 if cfg.optimizer == "adamw" else 4
+        out["weights"] = p_dev * 3 + counts["total"] / n_devices * \
+            (4 * 2 + opt_mult + wbytes)
+        # activations: layer-boundary checkpoints write (fwd) + read (bwd)
+        tokens_dev = shape.global_batch * shape.seq_len / \
+            max(n_devices / _model_axis(n_devices), 1)
+        act = cfg.n_layers * tokens_dev * d * 2 * 2  # write+read, bf16
+        out["activations"] = act * 2.0  # qkv/ffn extras under remat
+        out["logits"] = tokens_dev * cfg.vocab / _model_axis(n_devices) * 4 * 2
+    elif shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / \
+            max(n_devices / _model_axis(n_devices), 1)
+        out["weights"] = p_dev
+        out["activations"] = cfg.n_layers * tokens_dev * d * 2 * 2
+        out["logits"] = tokens_dev * cfg.vocab / _model_axis(n_devices) * 4
+    else:  # decode: weights once per token + cache read/write
+        out["weights"] = counts["active" if cfg.n_experts else "total"] \
+            * wbytes / n_devices
+        kv, hd = max(cfg.n_kv_heads, 1), cfg.hd
+        n_attn = cfg.n_layers if cfg.family != "hybrid" else \
+            cfg.n_layers // max(cfg.shared_attn_period, 1)
+        if cfg.family == "ssm":
+            cache = cfg.n_layers * shape.global_batch * cfg.ssm_heads * \
+                cfg.ssm_state * cfg.ssm_headdim * 2 * 2
+        else:
+            kv_bytes = (1.0 + 4.0 / hd) if cfg.kv_cache_dtype == "int8" \
+                else 2.0  # int8 + per-(token,head) f32 scale vs bf16
+            cache = n_attn * shape.global_batch * shape.seq_len * kv * hd \
+                * kv_bytes  # read the full cache
+            if cfg.family == "hybrid":
+                cache += cfg.n_layers * shape.global_batch * cfg.ssm_heads \
+                    * cfg.ssm_state * cfg.ssm_headdim * 2 * 2
+        out["kv_cache"] = cache / n_devices
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def _model_axis(n_devices: int) -> int:
+    return 16 if n_devices % 16 == 0 else 1

@@ -1,0 +1,121 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+"""Collective profiler for one dry-run cell: groups trip-scaled collective
+bytes by (kind, shape) so the dominant contributor is obvious.
+
+    PYTHONPATH=src python -m repro.launch.diag --arch X --shape Y [--save f]
+"""
+import argparse
+import re
+import sys
+
+from repro.launch.hlo_analysis import (
+    _build_multipliers, _shape_bytes, _split_computations, COLLECTIVE_OPS,
+    analyze_hlo,
+)
+
+
+def profile_collectives(hlo: str, top: int = 15):
+    comps = _split_computations(hlo)
+    mult = _build_multipliers(comps)
+    rows = []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if op in COLLECTIVE_OPS:
+                b = _shape_bytes(ins.shape) * m
+                rows.append((b, m, op, ins.shape[:70], comp.name[:40]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/dev: {total:.3e}")
+    for b, m, op, shape, comp in rows[:top]:
+        print(f"  {b:10.3e}B ({b / max(total, 1):5.1%}) x{m:<5.0f} {op:20s} "
+              f"{shape} in {comp}")
+    return rows
+
+
+def profile_dots(hlo: str, top: int = 10):
+    from repro.launch.hlo_analysis import _parse_shape
+    comps = _split_computations(hlo)
+    mult = _build_multipliers(comps)
+    name_shape = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            name_shape[ins.name] = ins.shape
+    rows = []
+    op_re = re.compile(r"\(([^)]*)\)")
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if not m:
+            continue
+        for ins in comp.instrs:
+            if ins.op != "dot":
+                continue
+            _, out_dims = _parse_shape(ins.shape)
+            out_prod = 1
+            for d in out_dims:
+                out_prod *= d
+            ops_m = op_re.search(ins.line[ins.line.find("dot("):])
+            lm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+            contract = 1
+            if ops_m and lm and lm.group(1):
+                lhs = name_shape.get(
+                    ops_m.group(1).split(",")[0].strip().lstrip("%"), "")
+                _, ld = _parse_shape(lhs)
+                for idx in lm.group(1).split(","):
+                    if int(idx) < len(ld):
+                        contract *= ld[int(idx)]
+            rows.append((m * 2 * out_prod * contract, m, ins.shape[:60],
+                         comp.name[:40]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total dot flops/dev: {total:.3e}")
+    for f, m, shape, comp in rows[:top]:
+        print(f"  {f:10.3e} ({f / max(total, 1):5.1%}) x{m:<5.0f} {shape} "
+              f"in {comp}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--save", default="")
+    ap.add_argument("--moe-dispatch", default="scatter")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import lower_cell  # after XLA_FLAGS
+    from repro.launch import mesh as mesh_mod
+    import repro.launch.dryrun as dr
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    # reuse lower_cell's plumbing but capture the compiled HLO text
+    hlo_holder = {}
+    orig_analyze = dr.analyze_hlo
+
+    def capture(hlo):
+        hlo_holder["hlo"] = hlo
+        return orig_analyze(hlo)
+
+    dr.analyze_hlo = capture
+    stats = lower_cell(args.arch, args.shape, mesh,
+                       moe_dispatch=args.moe_dispatch)
+    dr.analyze_hlo = orig_analyze
+    print(f"status={stats['status']} compile={stats.get('compile_s')}s")
+    hlo = hlo_holder.get("hlo", "")
+    if args.save:
+        open(args.save, "w").write(hlo)
+    print("== collectives ==")
+    profile_collectives(hlo)
+    print("== dots ==")
+    profile_dots(hlo)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell and dump memory / cost / collective statistics for the roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+      --shape train_4k --mesh single            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun                      # the full 40-cell matrix
+
+Each cell produces JSON: per-device HLO flops / bytes (cost_analysis),
+per-device argument/output/temp bytes (memory_analysis), and per-device
+collective bytes by op kind parsed from the post-SPMD optimized HLO.
+Results are cached by (arch, shape, mesh, tag) — reruns skip built cells.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro import configs
+from repro.data.batches import decode_token_spec, train_input_specs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec, cell_is_runnable
+from repro.train.sharding import (
+    batch_pspecs, decode_state_pspecs, dp_axes, opt_state_pspecs,
+    param_pspecs, sanitize_pspecs,
+)
+from repro.train.train_step import make_serve_step, make_train_step
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,256,320]' -> bytes."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collective_bytes(hlo: str) -> Dict[str, Any]:
+    """Sum the output-shape bytes of every collective op in post-SPMD HLO.
+    Shapes in the partitioned module are PER-DEVICE."""
+    out: Dict[str, Any] = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    # lines look like:  %x = bf16[8,128]{1,0} all-reduce(...), replica_groups=
+    pat = re.compile(
+        r"=\s+((?:\([^)]*\))|(?:\S+))\s+(" + "|".join(COLLECTIVE_OPS) +
+        r")(?:-start|-done)?\(")
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.groups()
+        if kind + "-done" in line and "-start" not in line:
+            continue  # avoid double counting start/done pairs
+        total = 0
+        if shape_str.startswith("("):
+            for part in shape_str.strip("()").split(", "):
+                total += _shape_bytes(part)
+        else:
+            total += _shape_bytes(shape_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += total
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _shardings(mesh, pspecs):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               moe_dispatch: str = "scatter") -> Dict[str, Any]:
+    """Lower + compile one (arch, shape) on a mesh; return stats dict."""
+    cfg = configs.get(arch)
+    if cfg.n_experts and moe_dispatch != cfg.moe_dispatch:
+        cfg = cfg.replace(moe_dispatch=moe_dispatch)
+    shape = SHAPES[shape_name]
+    runnable, why = cell_is_runnable(cfg, shape)
+    if not runnable:
+        return {"status": "skipped", "reason": why}
+    from repro.models import dist
+    dist.set_mesh(mesh)   # model-internal sharding hints (models/dist.py)
+
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    if shape.kind in ("train", "prefill"):
+        if shape.kind == "train" and \
+                cfg.n_kv_heads % int(mesh.shape["model"]) != 0:
+            cfg = cfg.replace(attn_param_replication=True)  # §Perf
+        params_shape = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+        pspecs = param_pspecs(cfg, params_shape, mesh)
+        if shape.kind == "train":
+            opt_init, step = make_train_step(cfg)
+            opt_shape = jax.eval_shape(opt_init, params_shape)
+            ospecs = opt_state_pspecs(cfg, opt_shape, pspecs)
+            bspecs = {k: batch_pspecs(cfg, mesh)[k]
+                      for k in train_input_specs(cfg, shape)}
+            jitted = jax.jit(step, in_shardings=(
+                _shardings(mesh, pspecs), _shardings(mesh, ospecs),
+                _shardings(mesh, bspecs)))
+            args = (params_shape, opt_shape, train_input_specs(cfg, shape))
+        else:  # prefill: forward only
+            def prefill(params, batch):
+                return T.forward(params, cfg, batch)[0]
+            bspecs = {k: batch_pspecs(cfg, mesh)[k]
+                      for k in train_input_specs(cfg, shape)}
+            jitted = jax.jit(prefill, in_shardings=(
+                _shardings(mesh, pspecs), _shardings(mesh, bspecs)))
+            args = (params_shape, train_input_specs(cfg, shape))
+    else:  # decode
+        # serving shards params model-only when they fit (FSDP's data-dim
+        # weight sharding exists for optimizer memory, which decode doesn't
+        # have — keeping it would gather weights inside the layer loop every
+        # token, §Perf). The ~0.8T llama4 keeps FSDP: 1.55 TB of bf16
+        # weights / 16 model shards would not fit a 16 GB chip.
+        if cfg.fsdp:
+            from repro.launch.analytic import param_counts
+            per_chip = param_counts(cfg)["total"] * 2 / 16
+            if per_chip < 12e9:
+                cfg = cfg.replace(fsdp=False)
+        params_shape = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+        pspecs = param_pspecs(cfg, params_shape, mesh)
+        state_shape = jax.eval_shape(
+            lambda: T.init_decode_state(cfg, shape.global_batch,
+                                        shape.seq_len))
+        sspecs = {k: decode_state_pspecs(cfg, mesh)[k] for k in state_shape}
+        sspecs = sanitize_pspecs(sspecs, state_shape, mesh)
+        token_spec = decode_token_spec(cfg, shape)
+        tspec = sanitize_pspecs(batch_pspecs(cfg, mesh)["tokens"],
+                                token_spec, mesh)
+        serve = make_serve_step(cfg)
+        jitted = jax.jit(serve, in_shardings=(
+            _shardings(mesh, pspecs), _shardings(mesh, sspecs),
+            NamedSharding(mesh, tspec)))
+        args = (params_shape, state_shape, token_spec)
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    stats: Dict[str, Any] = {
+        "status": "ok", "arch": arch, "shape": shape_name,
+        "kind": shape.kind, "mesh": list(mesh.devices.shape),
+        "n_devices": int(np.prod(mesh.devices.shape)),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    try:
+        ma = compiled.memory_analysis()
+        stats["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        stats["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        stats["cost"] = {"flops": float(ca.get("flops", -1)),
+                         "bytes_accessed": float(ca.get("bytes accessed", -1))}
+    except Exception as e:  # pragma: no cover
+        stats["cost"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    h = analyze_hlo(hlo)   # trip-count-aware (see hlo_analysis.py)
+    stats["hlo"] = {
+        "dot_flops": h.flops,
+        "memory_bytes_proxy": h.memory_bytes,
+        "collective_bytes": h.collective_bytes,
+        "collectives": {k: v for k, v in h.collectives.items()
+                        if v["count"]},
+        "n_dots": h.n_dots,
+        "n_collectives": h.n_collectives,
+    }
+    stats["collectives"] = parse_collective_bytes(hlo)  # raw (untripped)
+    stats["hlo_bytes"] = len(hlo)
+    return stats
+
+
+def cell_key(arch: str, shape: str, mesh_name: str, tag: str = "") -> str:
+    return f"{arch}__{shape}__{mesh_name}" + (f"__{tag}" if tag else "")
+
+
+def run_cells(archs, shapes, mesh_names, out_path: str, tag: str = "",
+              moe_dispatch: str = "scatter", force: bool = False):
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    results: Dict[str, Any] = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    meshes = {}
+    for mn in mesh_names:
+        meshes[mn] = make_production_mesh(multi_pod=(mn == "multipod"))
+    for arch in archs:
+        for shape in shapes:
+            for mn in mesh_names:
+                keyname = cell_key(arch, shape, mn, tag)
+                if not force and keyname in results and \
+                        results[keyname].get("status") in ("ok", "skipped"):
+                    print(f"[cache] {keyname}")
+                    continue
+                print(f"[run]   {keyname} ...", flush=True)
+                try:
+                    stats = lower_cell(arch, shape, meshes[mn],
+                                       moe_dispatch=moe_dispatch)
+                except Exception as e:
+                    stats = {"status": "error", "error": str(e),
+                             "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[ERROR] {keyname}: {e}")
+                results[keyname] = stats
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+                if stats.get("status") == "ok":
+                    print(f"[ok]    {keyname} compile={stats['compile_s']}s "
+                          f"dotflops/dev={stats['hlo']['dot_flops']:.3e} "
+                          f"coll/dev={stats['hlo']['collective_bytes']:.3e}B")
+                elif stats.get("status") == "skipped":
+                    print(f"[skip]  {keyname}: {stats['reason']}")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run the full arch × shape matrix")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--moe-dispatch", default="scatter",
+                    choices=["scatter", "onehot", "sort"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = configs.names() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    mesh_names = {"single": ["single"], "multipod": ["multipod"],
+                  "both": ["single", "multipod"]}[args.mesh]
+    results = run_cells(archs, shapes, mesh_names, args.out, tag=args.tag,
+                        moe_dispatch=args.moe_dispatch, force=args.force)
+    bad = {k: v for k, v in results.items() if v.get("status") == "error"}
+    print(f"\n{len(results)} cells recorded, {len(bad)} errors")
+    for k in bad:
+        print(f"  ERROR {k}: {bad[k]['error'][:200]}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+"""Dry-run of the gradient-synchronisation collective, uncompressed vs
+bitplane-compressed (§Perf hillclimb cell 3 — the paper's technique on the
+collective path).
+
+Lowers a shard_map program over the production mesh's "data" axis that
+psums one full gradient pytree for the given arch, and counts per-device
+collective bytes in the compiled HLO — once with f32 gradients, once with
+top-k-bitplane integer codes (error feedback carried).
+
+    PYTHONPATH=src python -m repro.launch.grad_sync_dryrun \
+        --arch internlm2-1.8b --k 4 8
+"""
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover
+    shard_map = jax.shard_map
+
+from repro import configs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.train.grad_compress import compressed_psum, zeros_like_feedback
+
+
+def lower_grad_sync(arch: str, k_planes: int = 0):
+    """Returns per-device collective bytes of one gradient sync."""
+    mesh = make_production_mesh()
+    cfg = configs.get(arch)
+    params_shape = jax.eval_shape(lambda key: T.init_params(key, cfg),
+                                  jax.random.PRNGKey(0))
+    grads_shape = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_shape)
+    n_data = int(mesh.shape["data"])
+
+    if k_planes == 0:
+        def sync(grads):
+            return jax.tree.map(
+                lambda g: jax.lax.psum(g, "data") / n_data, grads)
+        args = (grads_shape,)
+    else:
+        def sync(grads, fb):
+            return compressed_psum(grads, fb, k_planes, "data",
+                                   n_ranks=n_data)
+        args = (grads_shape, grads_shape)
+
+    # grads replicated over "model" (each model shard owns its slice; the
+    # data-axis sync is what we're measuring), sharded over nothing else:
+    specs = jax.tree.map(lambda _: P(), grads_shape)
+    smapped = shard_map(sync, mesh=mesh,
+                        in_specs=tuple(specs for _ in args),
+                        out_specs=specs if k_planes == 0
+                        else (specs, specs),
+                        check_rep=False)
+    with mesh:
+        compiled = jax.jit(smapped).lower(*args).compile()
+    st = analyze_hlo(compiled.as_text())
+    return st
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--k", type=int, nargs="*", default=[8, 4])
+    args = ap.parse_args(argv)
+    base = lower_grad_sync(args.arch, 0)
+    print(f"{args.arch} grad sync, f32 baseline: "
+          f"{base.collective_bytes:.4e} B/dev")
+    for k in args.k:
+        st = lower_grad_sync(args.arch, k)
+        print(f"  k={k:2d} bitplanes: {st.collective_bytes:.4e} B/dev "
+              f"({base.collective_bytes / st.collective_bytes:.2f}x fewer)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

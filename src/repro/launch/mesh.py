@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets the fake-device XLA flag before
+anything else touches jax).
+
+Hardware model (roofline constants for TPU v5e): 197 TFLOP/s bf16/chip,
+819 GB/s HBM/chip, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+# v5e roofline constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 1):
+    """Small-mesh helper for tests/examples on real local devices."""
+    data = n_devices // model_parallel
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

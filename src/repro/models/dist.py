@@ -1,0 +1,67 @@
+"""Distribution context for model-internal sharding hints.
+
+Model code is mesh-agnostic by default; the launcher (dryrun/train/serve)
+registers the active mesh here, and layers consult it to place
+with_sharding_constraint hints whose *need* depends on mesh geometry (e.g.
+context-parallel attention only when kv_heads don't divide the model axis).
+All entries besides the hinted dims stay UNCONSTRAINED so XLA keeps
+propagating batch/data shardings.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_CTX = {"mesh": None}
+
+# hint() entry sentinel: force this dim replicated (vs None = unconstrained)
+REP = "__replicated__"
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _CTX["mesh"] = mesh
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = _CTX["mesh"]
+    _CTX["mesh"] = mesh
+    try:
+        yield
+    finally:
+        _CTX["mesh"] = prev
+
+
+def axis_size(name: str) -> int:
+    mesh = _CTX["mesh"]
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[name])
+
+
+def hint(x, *entries):
+    """with_sharding_constraint with UNCONSTRAINED for None entries; no-op
+    when no mesh is registered (pure-CPU tests) or dims don't divide."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    fixed = []
+    for dim, e in zip(x.shape, entries):
+        if e is None:
+            fixed.append(P.UNCONSTRAINED)
+            continue
+        if e == REP:
+            fixed.append(None)          # replicated
+            continue
+        names = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for n in names:
+            if n not in mesh.axis_names:
+                return x
+            size *= int(mesh.shape[n])
+        fixed.append(e if dim % size == 0 else P.UNCONSTRAINED)
+    fixed += [P.UNCONSTRAINED] * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(x, P(*fixed))

@@ -1,0 +1,384 @@
+"""Common transformer layers: RMSNorm, RoPE, GQA attention, MLP.
+
+Pure-JAX (no framework): parameters are plain dict pytrees created by
+``init_*`` functions; every function takes explicit params and is
+shard_map/pjit-agnostic (sharding is annotated at the train/serve step
+level via PartitionSpec trees built in repro/train/sharding.py).
+
+All math is explicitly dtyped: params in cfg.param_dtype, activations in
+cfg.dtype, softmax/normalisation accumulation in float32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import dist
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+
+def _dt(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------- RMSNorm --
+
+def init_rmsnorm(key, d: int, cfg: ModelConfig) -> Params:
+    return {"scale": jnp.ones((d,), _pdt(cfg))}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE --
+
+def rope_frequencies(cfg: ModelConfig) -> Array:
+    rot = int(cfg.hd * cfg.partial_rotary)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, rot, 2, dtype=np.float32)
+                                    / rot))
+    return jnp.asarray(inv, jnp.float32)  # (rot/2,)
+
+
+def apply_rope(x: Array, positions: Array, inv_freq: Array) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    rot2 = inv_freq.shape[0]
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (...,S,rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x_rot = x[..., : 2 * rot2]
+    x_pass = x[..., 2 * rot2:]
+    x1 = x_rot[..., 0::2]
+    x2 = x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+# -------------------------------------------------------------- Attention --
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * hd), _pdt(cfg)) * s),
+        "wk": (jax.random.normal(k2, (d, kv * hd), _pdt(cfg)) * s),
+        "wv": (jax.random.normal(k3, (d, kv * hd), _pdt(cfg)) * s),
+        "wo": (jax.random.normal(k4, (h * hd, d), _pdt(cfg)) * s),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), _pdt(cfg))
+        p["bk"] = jnp.zeros((kv * hd,), _pdt(cfg))
+        p["bv"] = jnp.zeros((kv * hd,), _pdt(cfg))
+    return p
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: Array,
+         positions: Array, inv_freq: Array, shard_cb=None):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if shard_cb is not None:
+        # reshard BEFORE RoPE: the post-rope tensors are f32 pairs and the
+        # reshard would move twice the bytes (§Perf)
+        q, k, v = shard_cb(q, k, v)
+    if inv_freq.shape[0]:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+def gqa_scores_mask(q_pos: Array, k_pos: Array, is_local: Array,
+                    window: int) -> Array:
+    """Causal mask, optionally restricted to a sliding window when
+    ``is_local`` (a traced scalar bool — layers are scanned)."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        local = causal & (q_pos[:, None] - k_pos[None, :] < window)
+        return jnp.where(is_local, local, causal)
+    return causal
+
+
+def gqa_attend(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), mask: (S,T) or (B,S,T)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None, :, :]
+    else:
+        mask_b = mask[:, None, None, :, :]
+    scores = jnp.where(mask_b, scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+# query-chunked attention: score tensors are O(B·H·Qc·T) instead of
+# O(B·H·S·T) — mandatory at 4k+ training / 32k prefill sequence lengths
+QUERY_CHUNK = 512
+
+
+def gqa_attend_chunked(q: Array, k: Array, v: Array, q_pos: Array,
+                       k_pos: Array, is_local: Array, window: int,
+                       chunk: int = QUERY_CHUNK, ctx_mode: str = "") -> Array:
+    b, s, h, hd = q.shape
+    if s <= chunk:
+        return gqa_attend(q, k, v,
+                          gqa_scores_mask(q_pos, k_pos, is_local, window))
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=0)
+    nq = (s + pad) // chunk
+    qs = jnp.moveaxis(q.reshape(b, nq, chunk, h, hd), 1, 0)
+    qp = q_pos.reshape(nq, chunk)
+    if ctx_mode == "seq":
+        # reshard ONCE outside the scan (a per-iteration hint gets hoisted
+        # by XLA into a full-tensor all-gather — §Perf): within-chunk rows
+        # shard over "model", heads replicated
+        qs = dist.hint(qs, None, None, "model", dist.REP, dist.REP)
+
+    def step(_, inp):
+        qc, qpc = inp
+        mask = gqa_scores_mask(qpc, k_pos, is_local, window)
+        return None, gqa_attend(qc, k, v, mask)
+
+    _, outs = jax.lax.scan(step, None, (qs, qp))
+    if ctx_mode == "seq":
+        outs = dist.hint(outs, None, None, "model", dist.REP, dist.REP)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s + pad, h, hd)
+    return out[:, :s]
+
+
+def attention(p: Params, cfg: ModelConfig, x: Array, positions: Array,
+              inv_freq: Array, is_local: Array) -> Array:
+    b, s, _ = x.shape
+    mode = _attn_shard_mode(cfg, b)
+
+    def shard_cb(q, k, v):
+        if mode == "batch":
+            # batch-parallel attention (§Perf): when kv heads don't divide
+            # the model axis, shard the whole attention block over
+            # (data, model) on batch — scores AND their gradients stay
+            # device-local; only the qkv/out reshards move bytes.
+            spec = _full_batch_axes(b)
+            q = dist.hint(q, spec, dist.REP, dist.REP, dist.REP)
+            k = dist.hint(k, spec, dist.REP, dist.REP, dist.REP)
+            v = dist.hint(v, spec, dist.REP, dist.REP, dist.REP)
+        elif mode == "seq":
+            # context parallelism for forward-only paths (prefill): K/V
+            # gathered, query chunks seq-sharded (no dk/dv reduction exists)
+            k = dist.hint(k, None, None, dist.REP, dist.REP)
+            v = dist.hint(v, None, None, dist.REP, dist.REP)
+        return q, k, v
+
+    q, k, v = _qkv(p, cfg, x, positions, inv_freq,
+                   shard_cb=shard_cb if mode else None)
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    out = gqa_attend_chunked(q, k, v, pos1d, pos1d, is_local,
+                             cfg.local_window, ctx_mode=mode)
+    if mode == "batch":
+        out = dist.hint(out, _full_batch_axes(b), dist.REP, dist.REP,
+                        dist.REP)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def _full_batch_axes(b: int):
+    # data/model first: on the multipod mesh batch (256) divides data*model
+    # (256) but not *512 — attention then replicates over "pod", which only
+    # costs the 2x pod redundancy inside this block
+    axes = []
+    size = 1
+    for a in ("data", "model", "pod"):
+        sz = dist.axis_size(a)
+        if sz > 1 and b % (size * sz) == 0:
+            axes.append(a)
+            size *= sz
+    return tuple(axes)
+
+
+def _attn_shard_mode(cfg: ModelConfig, b: int) -> str:
+    """'' (plain: kv heads divide the model axis OR batch too small) |
+    'batch' (shard the attention block on batch over data×model).
+
+    A 'seq' (context-parallel) mode was tried and REFUTED for this code
+    shape (EXPERIMENTS.md §Perf): scan-over-query-chunks forces either
+    full-tensor gathers or per-iteration broadcasts when the within-chunk
+    rows are model-sharded. With attention weights replicated over "model"
+    (sharding.py) the plain mode has zero attention collectives at the cost
+    of model-axis-replicated attention compute — the right trade at
+    prefill batch sizes."""
+    msize = dist.axis_size("model")
+    if msize <= 1 or cfg.n_kv_heads % msize == 0:
+        return ""
+    if not cfg.attn_param_replication:
+        return ""   # head-sharded weights: hints would fight the layout
+    if b % (dist.axis_size("data") * msize) == 0:
+        return "batch"
+    return ""
+
+
+def _attend_full_mask_chunked(q: Array, k: Array, v: Array,
+                              chunk: int = 0) -> Array:
+    """Unmasked attention with query chunking (encoders / cross-attn)."""
+    b, s, h, hd = q.shape
+    chunk = chunk or QUERY_CHUNK
+    if s <= chunk:
+        return gqa_attend(q, k, v, jnp.ones((s, k.shape[1]), bool))
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (s + pad) // chunk
+    qs = jnp.moveaxis(q.reshape(b, nq, chunk, h, hd), 1, 0)
+    mask = jnp.ones((chunk, k.shape[1]), bool)
+
+    def step(_, qc):
+        return None, gqa_attend(qc, k, v, mask)
+
+    _, outs = jax.lax.scan(step, None, qs)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s + pad, h, hd)[:, :s]
+
+
+def attention_bidir(p: Params, cfg: ModelConfig, x: Array, positions: Array,
+                    inv_freq: Array) -> Array:
+    """Bidirectional (encoder) attention — no causal mask."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions, inv_freq)
+    out = _attend_full_mask_chunked(q, k, v)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention(p: Params, cfg: ModelConfig, x: Array, enc_out: Array,
+                    positions: Array, enc_positions: Array,
+                    inv_freq: Array) -> Array:
+    """Decoder cross-attention: queries from x, keys/values from enc_out."""
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (enc_out @ p["wk"].astype(x.dtype)).reshape(b, t, kv, hd)
+    v = (enc_out @ p["wv"].astype(x.dtype)).reshape(b, t, kv, hd)
+    out = _attend_full_mask_chunked(q, k, v)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: Array,
+                     cache_k: Array, cache_v: Array, pos: Array,
+                     inv_freq: Array, is_local: Array,
+                     scales: Optional[Tuple[Array, Array]] = None):
+    """Single-token decode: x (B,1,D); cache_k/v (B,T,K,hd); pos scalar.
+    Returns (out, new_cache_k, new_cache_v[, new_scales]).
+
+    With cfg.kv_cache_dtype == "int8", cache_k/v are int8 and ``scales``
+    carries (k_scale, v_scale) of shape (B,T,K) — per-token-per-head
+    symmetric quantisation. Memory streamed per decoded token drops ~2x
+    (the dominant term of the decode roofline, §Perf)."""
+    b = x.shape[0]
+    t = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions, inv_freq)
+    q8 = cfg.kv_cache_dtype == "int8"
+    if q8:
+        k_s, v_s = scales
+        ks_new = jnp.max(jnp.abs(k), axis=-1) / 127.0        # (B,1,K)
+        vs_new = jnp.max(jnp.abs(v), axis=-1) / 127.0
+        k_q = jnp.round(k / jnp.maximum(ks_new, 1e-12)[..., None]
+                        ).astype(jnp.int8)
+        v_q = jnp.round(v / jnp.maximum(vs_new, 1e-12)[..., None]
+                        ).astype(jnp.int8)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_q, pos,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_q, pos,
+                                                      axis=1)
+        k_s = jax.lax.dynamic_update_slice_in_dim(
+            k_s, ks_new.astype(k_s.dtype), pos, axis=1)
+        v_s = jax.lax.dynamic_update_slice_in_dim(
+            v_s, vs_new.astype(v_s.dtype), pos, axis=1)
+        kf = cache_k.astype(x.dtype) * k_s[..., None].astype(x.dtype)
+        vf = cache_v.astype(x.dtype) * v_s[..., None].astype(x.dtype)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos,
+                                                      axis=1)
+        kf, vf = cache_k, cache_v
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    mask = gqa_scores_mask(jnp.full((1,), pos, jnp.int32), k_pos,
+                           is_local, cfg.local_window)
+    out = gqa_attend(q, kf, vf, mask)
+    out = out.reshape(b, 1, -1) @ p["wo"].astype(x.dtype)
+    if q8:
+        return out, cache_k, cache_v, (k_s, v_s)
+    return out, cache_k, cache_v
+
+
+# -------------------------------------------------------------------- MLP --
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = d ** -0.5
+    if cfg.act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wg": jax.random.normal(k1, (d, f), _pdt(cfg)) * s,
+                "wu": jax.random.normal(k2, (d, f), _pdt(cfg)) * s,
+                "wd": jax.random.normal(k3, (f, d), _pdt(cfg)) * (f ** -0.5)}
+    k1, k2 = jax.random.split(key, 2)
+    return {"w1": jax.random.normal(k1, (d, f), _pdt(cfg)) * s,
+            "w2": jax.random.normal(k2, (f, d), _pdt(cfg)) * (f ** -0.5)}
+
+
+def mlp(p: Params, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.act == "swiglu":
+        g = jax.nn.silu(x @ p["wg"].astype(x.dtype))
+        u = x @ p["wu"].astype(x.dtype)
+        return (g * u) @ p["wd"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ------------------------------------------------------------- Embeddings --
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    p = {"table": jax.random.normal(key, (cfg.vocab, cfg.d_model),
+                                    _pdt(cfg))}
+    return p
+
+
+def embed(p: Params, cfg: ModelConfig, tokens: Array) -> Array:
+    return p["table"].astype(_dt(cfg))[tokens]
+
+
+def unembed(p: Params, head: Optional[Array], cfg: ModelConfig,
+            x: Array) -> Array:
+    if cfg.tied_embeddings or head is None:
+        return x @ p["table"].astype(x.dtype).T
+    return x @ head.astype(x.dtype)

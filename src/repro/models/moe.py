@@ -1,0 +1,200 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded dispatch.
+
+Baseline dispatch is the Switch-style one-hot einsum (dense dispatch masks):
+TPU-friendly (all matmuls, no gathers), deterministic, capacity-dropped.
+A sort-based dispatch variant is provided for the §Perf hillclimb — it
+replaces the (tokens × experts × capacity) dispatch einsums with argsort +
+one-hot-free segment matmuls at lower HLO FLOPs.
+
+Expert weights are stacked (E, D, F) so the expert dim shards over the
+"model" mesh axis (expert parallelism); the combine path composes with a
+shared expert (Llama-4 style) when cfg.n_shared_experts > 0.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dist
+from repro.models.config import ModelConfig
+from repro.models.layers import _pdt
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    keys = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "router": jax.random.normal(keys[0], (d, e), jnp.float32) * s,
+        "wg": jax.random.normal(keys[1], (e, d, f), _pdt(cfg)) * s,
+        "wu": jax.random.normal(keys[2], (e, d, f), _pdt(cfg)) * s,
+        "wd": jax.random.normal(keys[3], (e, f, d), _pdt(cfg)) * (f ** -0.5),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(keys[4], 3)
+        p["shared_wg"] = jax.random.normal(k1, (d, fs), _pdt(cfg)) * s
+        p["shared_wu"] = jax.random.normal(k2, (d, fs), _pdt(cfg)) * s
+        p["shared_wd"] = jax.random.normal(k3, (fs, d), _pdt(cfg)) * (fs ** -0.5)
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(cap - cap % -8 if cap % 8 else cap, 8)  # round up to 8
+
+
+def moe_block(p: Params, cfg: ModelConfig, x: Array,
+              dispatch: str = "scatter") -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (out, aux_loss). Dispatch: scatter | onehot | sort.
+
+    scatter (default): cumsum-based queue positions + direct scatter/gather;
+      memory O(N·E) ints + O(E·C·D) queues — the only SPMD-feasible option
+      at production token counts.
+    onehot: Switch/GShard dense dispatch masks — O(N·E·C); reference
+      implementation, small shapes only.
+    sort: argsort-based (§Perf variant, avoids the (N,E) cumsum).
+    """
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    n = b * s
+    # route in the compute dtype (softmax in f32): casting the full (N, D)
+    # token tensor to f32 doubled the dominant dispatch collectives (§Perf)
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)    # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch): E * Σ_e f_e · p_e
+    # (explicit f32: one_hot's default dtype follows jax_enable_x64 and a
+    # f64 aux would poison the scan carry dtype)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], cfg.n_experts,
+                                 dtype=jnp.float32), axis=0)
+    aux = jnp.float32(cfg.n_experts) * jnp.sum(me * ce)
+
+    cap = _capacity(cfg, n)
+    if dispatch == "onehot":
+        out = _dispatch_onehot(p, cfg, xt, gate_vals, gate_idx, cap)
+    elif dispatch == "scatter":
+        out = _dispatch_scatter(p, cfg, xt, gate_vals, gate_idx, cap)
+    else:
+        out = _dispatch_sort(p, cfg, xt, gate_vals, gate_idx, cap)
+
+    if cfg.n_shared_experts:
+        g = jax.nn.silu(xt @ p["shared_wg"].astype(xt.dtype))
+        u = xt @ p["shared_wu"].astype(xt.dtype)
+        out = out + (g * u) @ p["shared_wd"].astype(xt.dtype)
+    return out.reshape(b, s, d), aux
+
+
+def _expert_ffn(p: Params, xe: Array) -> Array:
+    """xe: (E, C, D) -> (E, C, D) via per-expert SwiGLU.
+
+    Sharding hints (§Perf): expert queues live (E->"model", C->"data") so
+    the expert matmuls run fully sharded — without the hints XLA leaves the
+    scattered queues replicated and all-reduces (E,C,F)-sized partials."""
+    xe = dist.hint(xe, "model", "data", None)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(xe.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"].astype(xe.dtype))
+    g = dist.hint(g, "model", "data", None)
+    u = dist.hint(u, "model", "data", None)
+    out = jnp.einsum("ecf,efd->ecd", g * u, p["wd"].astype(xe.dtype))
+    return dist.hint(out, "model", "data", None)
+
+
+def _dispatch_onehot(p: Params, cfg: ModelConfig, xt: Array,
+                     gate_vals: Array, gate_idx: Array, cap: int) -> Array:
+    """Switch-style dense dispatch: build (N, E, C) one-hot dispatch/combine
+    tensors and einsum. Baseline; HLO cost ~ 2·N·E·C·D extra FLOPs."""
+    n, d = xt.shape
+    e = cfg.n_experts
+    expert_onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (N,k,E)
+    # position of each (token, slot) within its expert queue
+    pos_in_expert = jnp.cumsum(expert_onehot.reshape(n * cfg.top_k, e),
+                               axis=0).reshape(n, cfg.top_k, e) - 1.0
+    keep = (pos_in_expert < cap) & (expert_onehot > 0)
+    pos_clipped = jnp.clip(pos_in_expert, 0, cap - 1).astype(jnp.int32)
+    cap_onehot = jax.nn.one_hot(pos_clipped, cap, dtype=jnp.float32)  # (N,k,E,C)
+    dispatch = jnp.einsum("nke,nkec->nec",
+                          expert_onehot * keep.astype(jnp.float32),
+                          cap_onehot)                                 # (N,E,C)
+    combine = jnp.einsum("nk,nke,nkec->nec",
+                         gate_vals.astype(jnp.float32),
+                         expert_onehot * keep.astype(jnp.float32),
+                         cap_onehot)
+    xe = jnp.einsum("nec,nd->ecd", dispatch.astype(xt.dtype), xt)
+    ye = _expert_ffn(p, xe)
+    return jnp.einsum("nec,ecd->nd", combine.astype(xt.dtype), ye)
+
+
+def _dispatch_scatter(p: Params, cfg: ModelConfig, xt: Array,
+                      gate_vals: Array, gate_idx: Array, cap: int) -> Array:
+    """Cumsum queue positions + expert-space scatter/gather.
+
+    §Perf-critical property: every cross-space data movement targets the
+    (E·C, D) EXPERT space — dispatch is a scatter whose destination is
+    expert-space (bwd: gather), combine is a gather whose source is
+    expert-space (bwd: scatter-add, again expert-space). Token-space (N, D)
+    scatter-adds never occur: `repeat`'s transpose is a *local* segment sum
+    (and for top-1 it is the identity). The naive combine
+    ``zeros(N,D).at[token].add(...)`` instead all-reduced an f32 (N, D)
+    buffer per layer per pass — the dominant collective of the llama4
+    baseline (EXPERIMENTS.md §Perf)."""
+    n, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    flat_expert = gate_idx.reshape(-1)                       # (N*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # (N*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                 # exclusive
+    pos_in_e = jnp.take_along_axis(pos, flat_expert[:, None],
+                                   axis=1)[:, 0]              # (N*k,)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, flat_expert * cap + pos_in_e, e * cap)
+    xt_rep = jnp.repeat(xt, k, axis=0) if k > 1 else xt      # (N·k, D)
+    xq = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].set(xt_rep)
+    ye = _expert_ffn(p, xq[:-1].reshape(e, cap, d)).reshape(e * cap, d)
+    gathered = ye[jnp.minimum(slot, e * cap - 1)]             # (N·k, D)
+    contrib = jnp.where(keep[:, None], gathered, 0.0) \
+        * gate_vals.reshape(-1)[:, None].astype(xt.dtype)
+    if k == 1:
+        return contrib
+    return jnp.sum(contrib.reshape(n, k, d), axis=1)          # local sum
+
+
+def _dispatch_sort(p: Params, cfg: ModelConfig, xt: Array,
+                   gate_vals: Array, gate_idx: Array, cap: int) -> Array:
+    """Sort-based dispatch (§Perf variant): argsort (token,slot) pairs by
+    expert id, gather tokens into (E, C) queues, run expert FFNs, scatter
+    back. Replaces the O(N·E·C) dispatch einsums with O(N log N) sort +
+    O(N·D) gathers."""
+    n, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    flat_expert = gate_idx.reshape(-1)                       # (N*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # position within expert queue
+    same = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                            (sorted_expert[1:] == sorted_expert[:-1])
+                            .astype(jnp.int32)])
+    seg_start = jax.lax.cummax(
+        jnp.where(same == 0, jnp.arange(n * k, dtype=jnp.int32), 0), axis=0)
+    pos = jnp.arange(n * k, dtype=jnp.int32) - seg_start
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_expert * cap + pos, e * cap)  # drop -> pad
+    xq = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].set(
+        xt[sorted_token])                                     # (E*C+1, D)
+    ye = _expert_ffn(p, xq[:-1].reshape(e, cap, d)).reshape(e * cap, d)
+    contrib = jnp.where(keep[:, None],
+                        ye[jnp.minimum(slot, e * cap - 1)]
+                        * sorted_gate[:, None].astype(xt.dtype), 0.0)
+    out = jnp.zeros((n, d), xt.dtype).at[sorted_token].add(contrib)
+    return out

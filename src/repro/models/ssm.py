@@ -1,0 +1,201 @@
+"""Mamba2 / SSD (state-space duality) blocks, arXiv:2405.21060.
+
+Training path uses the chunked SSD algorithm: the sequence is split into
+chunks of Q tokens; within a chunk the recurrence is computed as a masked
+attention-like quadratic form (MXU-friendly), and chunk summary states are
+passed through a lax.scan (the only sequential dependency, length S/Q).
+
+Decode path is the O(1) recurrence: h' = exp(A·dt)·h + dt·B⊗x, y = C·h.
+
+Layout: x (B,S,D) -> in_proj -> [z | xc | B | C | dt]; xc passes a short
+causal conv1d; heads H = d_inner / headdim P; state N = cfg.ssm_state;
+gated RMSNorm on output (y · silu(z)) then out_proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dt, _pdt, rmsnorm
+
+Array = jnp.ndarray
+Params = Dict[str, Array]
+
+
+def init_ssd(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    conv_dim = di + 2 * g * n
+    keys = jax.random.split(key, 6)
+    s = d ** -0.5
+    proj_out = 2 * di + 2 * g * n + h   # z, xc, B, C, dt
+    return {
+        "in_proj": jax.random.normal(keys[0], (d, proj_out), _pdt(cfg)) * s,
+        "conv_w": jax.random.normal(keys[1], (cfg.ssm_conv, conv_dim),
+                                    _pdt(cfg)) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), _pdt(cfg)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), _pdt(cfg)),
+        "out_proj": jax.random.normal(keys[2], (di, d), _pdt(cfg))
+        * (di ** -0.5),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xc = proj[..., di:2 * di]
+    bmat = proj[..., 2 * di:2 * di + g * n]
+    cmat = proj[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = proj[..., 2 * di + 2 * g * n:]
+    return z, xc, bmat, cmat, dt
+
+
+def _conv1d(cfg: ModelConfig, w: Array, b: Array, x: Array,
+            state: Array = None):
+    """Causal depthwise conv over (B, S, C). state: (B, K-1, C) history for
+    decode; returns (out, new_state)."""
+    k = cfg.ssm_conv
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    out = jax.nn.silu(out + b.astype(x.dtype))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return out, new_state
+
+
+def _ssd_chunked(cfg: ModelConfig, xh: Array, dt: Array, a: Array,
+                 bmat: Array, cmat: Array,
+                 init_state: Array = None) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+    xh:   (B, S, H, P)    inputs per head
+    dt:   (B, S, H)       positive step sizes
+    a:    (H,)            positive decay rates (A = -a)
+    bmat: (B, S, G, N), cmat: (B, S, G, N); heads map to groups H/G each.
+    Returns y (B, S, H, P), final_state (B, H, N, P).
+    """
+    b, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    hg = h // g
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]  # (1,Q,Q,1)
+
+    # one chunk per scan step: only (B,Q,Q,H)-sized intermediates are ever
+    # alive (materialising all NC chunks at once is O(B·S·Q·H) — hopeless at
+    # 32k+ sequence lengths)
+    xc = jnp.moveaxis(xh.reshape(b, nc, q, h, p), 1, 0)        # (NC,B,Q,H,P)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, h), 1, 0)          # (NC,B,Q,H)
+    bc = jnp.moveaxis(bmat.reshape(b, nc, q, g, n), 1, 0)
+    cc = jnp.moveaxis(cmat.reshape(b, nc, q, g, n), 1, 0)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), xh.dtype)
+
+    def step(state, inp):
+        xcb, dtcb, bcb, ccb = inp          # (B,Q,H,P) (B,Q,H) (B,Q,G,N) x2
+        ldec = dtcb * a[None, None, :]                       # (B,Q,H)
+        cum = jnp.cumsum(ldec, axis=1)                       # inclusive
+        li = cum[:, :, None, :]                              # (B,Q,1,H)
+        lj = cum[:, None, :, :]                              # (B,1,Q,H)
+        # double-where: keep exp() finite on the masked branch or its inf
+        # poisons gradients through the where
+        diff = jnp.where(mask, li - lj, 0.0)
+        decay = jnp.where(mask, jnp.exp(-diff), 0.0)         # (B,Q,Q,H)
+        cb = jnp.einsum("bqgn,bkgn->bqkg", ccb, bcb)         # (B,Q,Q,G)
+        cbh = jnp.repeat(cb, hg, axis=-1)                    # (B,Q,Q,H)
+        w = cbh.astype(jnp.float32) * decay * dtcb[:, None, :, :]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", w.astype(xh.dtype), xcb)
+
+        # chunk summary: S_c = Σ_j exp(cum_Q - cum_j) dt_j B_j ⊗ x_j
+        tail = jnp.exp(-(cum[:, -1:, :] - cum))              # (B,Q,H)
+        bh = jnp.repeat(bcb, hg, axis=2)                     # (B,Q,H,N)
+        wb = ((tail * dtcb)[..., None] * bh).astype(xh.dtype)  # (B,Q,H,N)
+        s_c = jnp.einsum("bqhn,bqhp->bhnp", wb, xcb)         # (B,H,N,P)
+
+        # inter-chunk: y += exp(-cum_i) C_i · state_in
+        ch = jnp.repeat(ccb, hg, axis=2)                     # (B,Q,H,N)
+        pref = jnp.exp(-cum)
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", ch, state) \
+            * pref[..., None].astype(xh.dtype)
+
+        chunk_decay = jnp.exp(-cum[:, -1, :])                # (B,H)
+        new_state = state * chunk_decay[..., None, None].astype(state.dtype) \
+            + s_c
+        return new_state, y_intra + y_inter
+
+    final, ys = jax.lax.scan(step, init_state, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_block(p: Params, cfg: ModelConfig, x: Array) -> Array:
+    """Full Mamba2 block (training/prefill): x (B,S,D) -> (B,S,D)."""
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xc, bmat, cmat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out, _ = _conv1d(cfg, p["conv_w"], p["conv_b"], conv_in)
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    xc = conv_out[..., :di]
+    bmat = conv_out[..., di:di + g * n]
+    cmat = conv_out[..., di + g * n:]
+    b_, s_ = x.shape[0], x.shape[1]
+    h, pd = cfg.ssm_heads, cfg.ssm_headdim
+    xh = xc.reshape(b_, s_, h, pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(p["a_log"])
+    y, _ = _ssd_chunked(cfg, xh,
+                        dt, a,
+                        bmat.reshape(b_, s_, g, n),
+                        cmat.reshape(b_, s_, g, n))
+    y = y + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(b_, s_, di)
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def ssd_decode(p: Params, cfg: ModelConfig, x: Array,
+               conv_state: Array, ssm_state: Array
+               ) -> Tuple[Array, Array, Array]:
+    """O(1) single-token decode. x: (B,1,D);
+    conv_state (B, K-1, conv_dim); ssm_state (B,H,N,P)."""
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xc, bmat, cmat, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out, new_conv = _conv1d(cfg, p["conv_w"], p["conv_b"], conv_in,
+                                 state=conv_state)
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    xc = conv_out[..., :di]
+    bmat = conv_out[..., di:di + g * n].reshape(-1, g, n)
+    cmat = conv_out[..., di + g * n:].reshape(-1, g, n)
+    b_ = x.shape[0]
+    h, pd = cfg.ssm_heads, cfg.ssm_headdim
+    hg = h // g
+    xh = xc.reshape(b_, h, pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0, :]
+    a = jnp.exp(p["a_log"])
+    dec = jnp.exp(-dt * a[None, :])                          # (B,H)
+    bh = jnp.repeat(bmat, hg, axis=1)                        # (B,H,N)
+    ch = jnp.repeat(cmat, hg, axis=1)
+    new_state = ssm_state * dec[..., None, None].astype(ssm_state.dtype) \
+        + (dt[..., None, None].astype(xh.dtype)
+           * bh[..., :, None] * xh[..., None, :])            # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_state)
+    y = y + xh * p["d_skip"][None, :, None].astype(xh.dtype)
+    y = y.reshape(b_, 1, di)
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), new_conv, new_state

@@ -1,0 +1,506 @@
+"""Model assembly for all assigned families.
+
+One module builds: parameter pytrees (layer-stacked for lax.scan), the
+training forward/loss, and the single-token decode step with KV-cache /
+SSM-state, for families:
+
+  dense   pre-norm GQA transformer (gemma3/qwen2.5/internlm2/glm4)
+  moe     dense attention + top-k MoE FFN (llama4-maverick, olmoe)
+  ssm     Mamba2 / SSD stack (mamba2-780m)
+  hybrid  Mamba2 backbone + shared attention block every K layers (zamba2)
+  encdec  encoder-decoder with cross attention (seamless-m4t; audio frontend
+          stubbed as precomputed frame embeddings)
+  vlm     dense decoder with prepended patch embeddings (phi-3-vision; CLIP
+          frontend stubbed)
+
+Everything is scan-over-layers (compile-time O(1) in depth) with optional
+jax.checkpoint remat around the layer body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import dist
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    """One transformer block's params (unstacked)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": L.init_rmsnorm(k1, cfg.d_model, cfg),
+         "norm2": L.init_rmsnorm(k2, cfg.d_model, cfg)}
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        p["ssd"] = S.init_ssd(k3, cfg)
+        return p
+    p["attn"] = L.init_attention(k3, cfg)
+    if cfg.family == "moe":
+        p["moe"] = M.init_moe(k4, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k4, cfg)
+    return p
+
+
+def _init_stacked(key, cfg: ModelConfig, n: int) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg))(keys)
+
+
+def _init_cross_block(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {"norm1": L.init_rmsnorm(k1, cfg.d_model, cfg),
+            "norm2": L.init_rmsnorm(k2, cfg.d_model, cfg),
+            "norm3": L.init_rmsnorm(k3, cfg.d_model, cfg),
+            "attn": L.init_attention(k4, cfg),
+            "cross": L.init_attention(k5, cfg),
+            "mlp": L.init_mlp(k6, cfg)}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    params: Params = {"embed": L.init_embedding(keys[0], cfg),
+                      "final_norm": L.init_rmsnorm(keys[1], cfg.d_model, cfg)}
+    if not cfg.tied_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[2], (cfg.d_model, cfg.vocab),
+            jnp.dtype(cfg.param_dtype)) * cfg.d_model ** -0.5
+
+    if cfg.family == "encdec":
+        params["encoder"] = {
+            "layers": _init_stacked(keys[3], cfg.replace(family="dense"),
+                                    cfg.n_encoder_layers),
+            "final_norm": L.init_rmsnorm(keys[4], cfg.d_model, cfg)}
+        dec_keys = jax.random.split(keys[5], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_cross_block(k, cfg))(dec_keys)
+        params["frame_proj"] = jax.random.normal(
+            keys[7], (cfg.d_model, cfg.d_model),
+            jnp.dtype(cfg.param_dtype)) * cfg.d_model ** -0.5
+        return params
+
+    params["layers"] = _init_stacked(keys[3], cfg, cfg.n_layers)
+
+    if cfg.family == "hybrid":
+        k1, k2, k3 = jax.random.split(keys[6], 3)
+        d = cfg.d_model
+        params["shared"] = {
+            "norm1": L.init_rmsnorm(k1, d, cfg),
+            "norm2": L.init_rmsnorm(k2, d, cfg),
+            "attn": L.init_attention(k3, cfg),
+            "mlp": L.init_mlp(jax.random.fold_in(k3, 1), cfg),
+            # Zamba2: shared-block input = Linear(concat(h, embeddings))
+            "fuse": jax.random.normal(jax.random.fold_in(keys[6], 2),
+                                      (2 * d, d), jnp.dtype(cfg.param_dtype))
+            * (2 * d) ** -0.5,
+        }
+    if cfg.family == "vlm":
+        # projection of precomputed patch embeddings into d_model
+        params["patch_proj"] = jax.random.normal(
+            keys[7], (cfg.d_model, cfg.d_model),
+            jnp.dtype(cfg.param_dtype)) * cfg.d_model ** -0.5
+    if cfg.family == "encdec" or cfg.frontend == "frames":
+        params["frame_proj"] = jax.random.normal(
+            keys[7], (cfg.d_model, cfg.d_model),
+            jnp.dtype(cfg.param_dtype)) * cfg.d_model ** -0.5
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer-type metadata (local/global pattern, shared-attn positions)
+# ---------------------------------------------------------------------------
+
+
+def layer_flags(cfg: ModelConfig) -> Dict[str, Array]:
+    idx = np.arange(cfg.n_layers)
+    if cfg.local_global_period > 0:
+        is_local = (idx % cfg.local_global_period) != \
+            (cfg.local_global_period - 1)
+    else:
+        is_local = np.zeros(cfg.n_layers, bool)
+    if cfg.shared_attn_period > 0:
+        shared_here = (idx % cfg.shared_attn_period) == \
+            (cfg.shared_attn_period - 1)
+    else:
+        shared_here = np.zeros(cfg.n_layers, bool)
+    return {"is_local": jnp.asarray(is_local),
+            "shared_here": jnp.asarray(shared_here),
+            "shared_idx": jnp.asarray(np.cumsum(shared_here) - 1)}
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    if cfg.shared_attn_period <= 0:
+        return 0
+    return cfg.n_layers // cfg.shared_attn_period
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(bp: Params, cfg: ModelConfig, x: Array, positions: Array,
+                 inv_freq: Array, is_local: Array) -> Tuple[Array, Array]:
+    h = x + L.attention(bp["attn"], cfg, L.rmsnorm(bp["norm1"], x),
+                        positions, inv_freq, is_local)
+    if cfg.family == "moe":
+        y, aux = M.moe_block(bp["moe"], cfg, L.rmsnorm(bp["norm2"], h),
+                             dispatch=cfg.moe_dispatch)
+        return h + y, aux
+    return h + L.mlp(bp["mlp"], cfg, L.rmsnorm(bp["norm2"], h)), jnp.float32(0)
+
+
+def _ssm_block(bp: Params, cfg: ModelConfig, x: Array) -> Array:
+    return x + S.ssd_block(bp["ssd"], cfg, L.rmsnorm(bp["norm1"], x))
+
+
+def _shared_attn(sp: Params, cfg: ModelConfig, x: Array, x0: Array,
+                 positions: Array, inv_freq: Array) -> Array:
+    fused = jnp.concatenate([x, x0], axis=-1) @ sp["fuse"].astype(x.dtype)
+    h = fused + L.attention(sp["attn"], cfg,
+                            L.rmsnorm(sp["norm1"], fused), positions,
+                            inv_freq, jnp.asarray(False))
+    return x + h + L.mlp(sp["mlp"], cfg, L.rmsnorm(sp["norm2"], h))
+
+
+def _stack(cfg: ModelConfig, params: Params, x: Array, positions: Array,
+           causal: bool = True) -> Tuple[Array, Array]:
+    """Run the scanned layer stack. Returns (hidden, aux_loss_sum)."""
+    inv_freq = L.rope_frequencies(cfg)
+    flags = layer_flags(cfg)
+    x0 = x
+    shared = params.get("shared")
+
+    def body(carry, inp):
+        h, aux = carry
+        bp, is_local = inp
+        if cfg.family in ("ssm", "hybrid"):
+            h = _ssm_block(bp, cfg, h)
+            return (h, aux), None
+        h, a = _dense_block(bp, cfg, h, positions, inv_freq,
+                            is_local if causal else jnp.asarray(False))
+        if seq_parallel_carry:
+            # sequence-parallel residual stream (§Perf/memory): the scan
+            # carry is the remat-saved layer boundary — storing it
+            # seq-sharded over "model" cuts saved-activation HBM by the
+            # model-axis size (48 layers x (B,S,D) does not fit otherwise
+            # at 4k seq). Only with batch-parallel attention (replicated
+            # attn weights): against head-sharded weights the per-layer
+            # reshard degenerates into gathers (§Perf, refuted variant).
+            h = dist.hint(h, None, "model", None)
+        return (h, aux + a), None
+
+    seq_parallel_carry = (
+        cfg.attn_param_replication and dist.axis_size("model") > 1
+        and cfg.n_kv_heads % dist.axis_size("model") != 0)
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+
+    if cfg.family == "hybrid":
+        # grouped: scan `period` Mamba2 layers, then the shared attn block
+        # (static unroll over the n_apps groups keeps cache slices per-app)
+        period = cfg.shared_attn_period
+        napp = n_shared_applications(cfg)
+        h, aux = x, jnp.float32(0)
+        done = 0
+        for g in range(napp):
+            grp = jax.tree.map(lambda a: a[done:done + period],
+                               params["layers"])
+            (h, aux), _ = jax.lax.scan(
+                body_fn, (h, aux), (grp, flags["is_local"][done:done + period]))
+            h = _shared_attn(shared, cfg, h, x0, positions, inv_freq)
+            done += period
+        if done < cfg.n_layers:
+            grp = jax.tree.map(lambda a: a[done:], params["layers"])
+            (h, aux), _ = jax.lax.scan(
+                body_fn, (h, aux), (grp, flags["is_local"][done:]))
+        return h, aux
+
+    (h, aux), _ = jax.lax.scan(
+        body_fn, (x, jnp.float32(0)),
+        (params["layers"], flags["is_local"]))
+    return h, aux
+
+
+def _encoder_stack(cfg: ModelConfig, params: Params, frames: Array) -> Array:
+    """Bidirectional encoder over precomputed frame embeddings (stub
+    frontend): frames (B, T, D)."""
+    enc_cfg = cfg.replace(family="dense", remat=cfg.remat)
+    x = frames @ params["frame_proj"].astype(frames.dtype)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    inv_freq = L.rope_frequencies(enc_cfg)
+
+    def body(h, bp):
+        hh = h + L.attention_bidir(bp["attn"], enc_cfg, L.rmsnorm(bp["norm1"], h),
+                                   positions, inv_freq)
+        hh = hh + L.mlp(bp["mlp"], enc_cfg, L.rmsnorm(bp["norm2"], hh))
+        return hh, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, x, params["encoder"]["layers"])
+    return L.rmsnorm(params["encoder"]["final_norm"], h)
+
+
+def _decoder_stack_cross(cfg: ModelConfig, params: Params, x: Array,
+                         enc_out: Array, positions: Array) -> Array:
+    inv_freq = L.rope_frequencies(cfg)
+    b, t_enc = enc_out.shape[0], enc_out.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32),
+                               (b, t_enc))
+
+    def body(h, bp):
+        hh = h + L.attention(bp["attn"], cfg, L.rmsnorm(bp["norm1"], h),
+                             positions, inv_freq, jnp.asarray(False))
+        hh = hh + L.cross_attention(bp["cross"], cfg,
+                                    L.rmsnorm(bp["norm2"], hh), enc_out,
+                                    positions, enc_pos, inv_freq)
+        hh = hh + L.mlp(bp["mlp"], cfg, L.rmsnorm(bp["norm3"], hh))
+        return hh, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, x, params["layers"])
+    return h
+
+
+def forward(params: Params, cfg: ModelConfig,
+            batch: Dict[str, Array]) -> Tuple[Array, Array]:
+    """-> (logits (B,S,V) over the *text* positions, aux_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens)
+    aux = jnp.float32(0)
+
+    if cfg.family == "encdec":
+        enc_out = _encoder_stack(cfg, params, batch["frames"])
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h = _decoder_stack_cross(cfg, params, x, enc_out, positions)
+    elif cfg.family == "vlm":
+        patches = batch["patches"] @ params["patch_proj"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        st = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(st, dtype=jnp.int32), (b, st))
+        h, aux = _stack(cfg, params, x, positions)
+        h = h[:, patches.shape[1]:, :]   # logits over text positions only
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, aux = _stack(cfg, params, x, positions)
+
+    h = L.rmsnorm(params["final_norm"], h)
+    logits = L.unembed(params["embed"], params.get("lm_head"), cfg, h)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig,
+            batch: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe_labels_nll = (logz - gold) * mask
+    ce = jnp.sum(safe_labels_nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token with cache)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype: Optional[str] = None) -> Dict[str, Array]:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    state: Dict[str, Array] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.kv_cache_dtype == "int8":
+            state["k"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd),
+                                   jnp.int8)
+            state["v"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd),
+                                   jnp.int8)
+            state["k_scale"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv),
+                                         jnp.float32)
+            state["v_scale"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv),
+                                         jnp.float32)
+        else:
+            state["k"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dt)
+            state["v"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dt)
+    elif cfg.family == "ssm":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        state["conv"] = jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                                   conv_dim), dt)
+        state["ssm"] = jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                                  cfg.ssm_state, cfg.ssm_headdim), dt)
+    elif cfg.family == "hybrid":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        state["conv"] = jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                                   conv_dim), dt)
+        state["ssm"] = jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                                  cfg.ssm_state, cfg.ssm_headdim), dt)
+        napp = n_shared_applications(cfg)
+        state["k"] = jnp.zeros((napp, batch, max_seq, kv, hd), dt)
+        state["v"] = jnp.zeros((napp, batch, max_seq, kv, hd), dt)
+        state["x0"] = jnp.zeros((batch, 1, cfg.d_model), dt)
+    elif cfg.family == "encdec":
+        state["k"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dt)
+        state["v"] = jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dt)
+        # cached encoder output for cross-attention
+        state["enc_out"] = jnp.zeros((batch, max_seq, cfg.d_model), dt)
+    return state
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: Dict[str, Array],
+                token: Array) -> Tuple[Array, Dict[str, Array]]:
+    """token: (B, 1) int32 -> (logits (B, 1, V), new state)."""
+    inv_freq = L.rope_frequencies(cfg)
+    flags = layer_flags(cfg)
+    x = L.embed(params["embed"], cfg, token)
+    pos = state["pos"]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        q8 = cfg.kv_cache_dtype == "int8"
+
+        def body(carry, inp):
+            h = carry
+            if q8:
+                bp, ck, cv, ks, vs, is_local = inp
+                a, nk, nv, (nks, nvs) = L.attention_decode(
+                    bp["attn"], cfg, L.rmsnorm(bp["norm1"], h), ck, cv,
+                    pos, inv_freq, is_local, scales=(ks, vs))
+            else:
+                bp, ck, cv, is_local = inp
+                a, nk, nv = L.attention_decode(bp["attn"], cfg,
+                                               L.rmsnorm(bp["norm1"], h),
+                                               ck, cv, pos, inv_freq,
+                                               is_local)
+            h = h + a
+            if cfg.family == "moe":
+                y, _ = M.moe_block(bp["moe"], cfg, L.rmsnorm(bp["norm2"], h),
+                                   dispatch=cfg.moe_dispatch)
+                h = h + y
+            else:
+                h = h + L.mlp(bp["mlp"], cfg, L.rmsnorm(bp["norm2"], h))
+            if q8:
+                return h, (nk, nv, nks, nvs)
+            return h, (nk, nv)
+
+        if q8:
+            h, (nk, nv, nks, nvs) = jax.lax.scan(
+                body, x, (params["layers"], state["k"], state["v"],
+                          state["k_scale"], state["v_scale"],
+                          flags["is_local"]))
+            new_state = dict(state, k=nk, v=nv, k_scale=nks, v_scale=nvs,
+                             pos=pos + 1)
+        else:
+            h, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], state["k"], state["v"],
+                          flags["is_local"]))
+            new_state = dict(state, k=nk, v=nv, pos=pos + 1)
+
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            h = carry
+            bp, conv, ssm_s = inp
+            y, nc, ns = S.ssd_decode(bp["ssd"], cfg,
+                                     L.rmsnorm(bp["norm1"], h), conv, ssm_s)
+            return h + y, (nc, ns)
+
+        h, (nc, ns) = jax.lax.scan(
+            body, x, (params["layers"], state["conv"], state["ssm"]))
+        new_state = dict(state, conv=nc, ssm=ns, pos=pos + 1)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        x0 = x
+
+        def body(carry, inp):
+            h = carry
+            bp, conv, ssm_s = inp
+            y, nc, ns = S.ssd_decode(bp["ssd"], cfg,
+                                     L.rmsnorm(bp["norm1"], h), conv, ssm_s)
+            return h + y, (nc, ns)
+
+        period = cfg.shared_attn_period
+        napp = n_shared_applications(cfg)
+        h = x
+        convs, ssms, ks, vs = [], [], [], []
+        done = 0
+        for g in range(napp):
+            sl = slice(done, done + period)
+            grp = jax.tree.map(lambda a: a[sl], params["layers"])
+            h, (nc, ns) = jax.lax.scan(
+                body, h, (grp, state["conv"][sl], state["ssm"][sl]))
+            convs.append(nc)
+            ssms.append(ns)
+            fused = jnp.concatenate([h, x0], axis=-1) \
+                @ shared["fuse"].astype(h.dtype)
+            a, nk, nv = L.attention_decode(
+                shared["attn"], cfg, L.rmsnorm(shared["norm1"], fused),
+                state["k"][g], state["v"][g], pos, inv_freq,
+                jnp.asarray(False))
+            hh = fused + a
+            h = h + hh + L.mlp(shared["mlp"], cfg,
+                               L.rmsnorm(shared["norm2"], hh))
+            ks.append(nk)
+            vs.append(nv)
+            done += period
+        if done < cfg.n_layers:
+            sl = slice(done, cfg.n_layers)
+            grp = jax.tree.map(lambda a: a[sl], params["layers"])
+            h, (nc, ns) = jax.lax.scan(
+                body, h, (grp, state["conv"][sl], state["ssm"][sl]))
+            convs.append(nc)
+            ssms.append(ns)
+        new_state = dict(state,
+                         conv=jnp.concatenate(convs, axis=0),
+                         ssm=jnp.concatenate(ssms, axis=0),
+                         k=jnp.stack(ks, axis=0),
+                         v=jnp.stack(vs, axis=0),
+                         pos=pos + 1)
+
+    elif cfg.family == "encdec":
+        enc_out = state["enc_out"]
+        b, t_enc = enc_out.shape[0], enc_out.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(t_enc, dtype=jnp.int32),
+                                   (b, t_enc))
+
+        def body(carry, inp):
+            h = carry
+            bp, ck, cv = inp
+            a, nk, nv = L.attention_decode(bp["attn"], cfg,
+                                           L.rmsnorm(bp["norm1"], h),
+                                           ck, cv, pos, inv_freq,
+                                           jnp.asarray(False))
+            h = h + a
+            h = h + L.cross_attention(bp["cross"], cfg,
+                                      L.rmsnorm(bp["norm2"], h), enc_out,
+                                      jnp.full((b, 1), pos, jnp.int32),
+                                      enc_pos, inv_freq)
+            h = h + L.mlp(bp["mlp"], cfg, L.rmsnorm(bp["norm3"], h))
+            return h, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(body, x,
+                                   (params["layers"], state["k"], state["v"]))
+        new_state = dict(state, k=nk, v=nv, pos=pos + 1)
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rmsnorm(params["final_norm"], h)
+    logits = L.unembed(params["embed"], params.get("lm_head"), cfg, h)
+    return logits, new_state

@@ -1,0 +1,116 @@
+"""Bitplane gradient compression with error feedback — the paper's
+"move fewer bytes under an error contract" idea applied to the gradient
+all-reduce (DESIGN.md §3).
+
+Per leaf: gradients are quantised to the top ``k_planes`` bitplanes of a
+shared power-of-two exponent (exactly the progressive-precision format of
+bitplane/encoder.py, held as int32 on device). The all-reduce then moves
+k-bit integers instead of 32-bit floats — collective bytes shrink by
+~k/32 — and the quantisation residual is fed back into the next step's
+gradient (error feedback), which keeps SGD convergence (the compression
+error stays bounded instead of accumulating).
+
+Two entry points:
+  * compress_decompress(grads, fb, k): pure pytree transform (single
+    process) — used to inject compression into any train step and for the
+    convergence-parity tests.
+  * compressed_psum(grads, fb, k, axis): shard_map-compatible data-parallel
+    mean that psums the quantised integers (what a real multi-host
+    deployment runs; the dry-run counts its collective bytes).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def zeros_like_feedback(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantise(g: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """g -> (int32 codes in [-2^k, 2^k], power-of-two scale)."""
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    # shared power-of-two exponent: 2^e >= amax (paper's level exponent)
+    e = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30)))
+    scale = jnp.exp2(e)
+    q = jnp.round(g32 / scale * (2.0 ** k)).astype(jnp.int32)
+    return q, scale
+
+
+def _dequantise(q: jnp.ndarray, scale: jnp.ndarray, k: int,
+                dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * (scale / (2.0 ** k))).astype(dtype)
+
+
+def compress_decompress(grads: Pytree, feedback: Pytree, k_planes: int
+                        ) -> Tuple[Pytree, Pytree]:
+    """Apply quantise->dequantise with error feedback. Returns
+    (compressed grads, new feedback residuals)."""
+    def per_leaf(g, fb):
+        corrected = g.astype(jnp.float32) + fb
+        q, scale = _quantise(corrected, k_planes)
+        deq = _dequantise(q, scale, k_planes, jnp.float32)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree.map(per_leaf, grads, feedback)
+    comp = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_fb = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_fb
+
+
+def sum_safe_int_dtype(k_planes: int, n_ranks: int):
+    """Narrowest signed integer that holds Σ_{ranks} q_i without overflow:
+    codes span ±2^k, the sum ±(n·2^k) — needs k + ceil(log2 n) + 1 bits."""
+    import math
+    bits = k_planes + math.ceil(math.log2(max(n_ranks, 2))) + 1
+    if bits <= 7:
+        return jnp.int8
+    if bits <= 15:
+        return jnp.int16
+    return jnp.int32
+
+
+def compressed_psum(grads: Pytree, feedback: Pytree, k_planes: int,
+                    axis: str, n_ranks: int = 0) -> Tuple[Pytree, Pytree]:
+    """Data-parallel mean over ``axis`` (inside shard_map) moving narrow
+    integer codes (top-k bitplanes) instead of f32: k=4 over 16 ranks rides
+    int8 (4x fewer collective bytes), k<=10 rides int16 (2x); scales
+    synchronise with a scalar pmax."""
+    n = jax.lax.psum(1, axis)
+    wire = sum_safe_int_dtype(k_planes, n_ranks or 64)
+
+    def per_leaf(g, fb):
+        corrected = g.astype(jnp.float32) + fb
+        # shared scale across replicas so integer sums are exact
+        amax = jax.lax.pmax(jnp.max(jnp.abs(corrected)), axis)
+        e = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30)))
+        scale = jnp.exp2(e)
+        q = jnp.round(corrected / scale * (2.0 ** k_planes)).astype(wire)
+        q_sum = jax.lax.psum(q, axis)                 # the compressed payload
+        mean = (q_sum.astype(jnp.float32)
+                * (scale / (2.0 ** k_planes)) / n).astype(g.dtype)
+        local_deq = (q.astype(jnp.float32)
+                     * (scale / (2.0 ** k_planes)))
+        return mean, corrected - local_deq
+
+    out = jax.tree.map(per_leaf, grads, feedback)
+    mean = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_fb = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_fb
+
+
+def payload_bytes(grads: Pytree, k_planes: int) -> int:
+    """Collective payload of one compressed all-reduce (k+1 bits/element,
+    sign included) vs 32-bit floats."""
+    n = sum(int(g.size) for g in jax.tree.leaves(grads))
+    return (n * (k_planes + 1) + 7) // 8

@@ -1,0 +1,123 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+Pure-pytree implementations (no optax dependency). Optimizer state shards
+exactly like the parameters (ZeRO-style via the same PartitionSpec tree), so
+FSDP configs automatically shard moments too.
+
+Adafactor is the default for the ~0.8T-param llama4-maverick config: Adam
+moments at fp32 would need ~24 GB/chip on a 256-chip v5e pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Pytree
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# ------------------------------------------------------------------ AdamW --
+
+def adamw_init(params: Pytree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    inner={"m": zeros, "v": jax.tree.map(jnp.copy, zeros)})
+
+
+def adamw_update(params: Pytree, grads: Pytree, state: OptState,
+                 lr: float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, wd: float = 0.01
+                 ) -> Tuple[Pytree, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        update = (m / c1) / (jnp.sqrt(v / c2) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.inner["m"], state.inner["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, inner={"m": new_m, "v": new_v})
+
+
+# -------------------------------------------------------------- Adafactor --
+
+def adafactor_init(params: Pytree) -> OptState:
+    def per_leaf(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    inner=jax.tree.map(per_leaf, params,
+                                       is_leaf=lambda x: hasattr(x, "ndim")))
+
+
+def adafactor_update(params: Pytree, grads: Pytree, state: OptState,
+                     lr: float, decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0
+                     ) -> Tuple[Pytree, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if p.ndim >= 2:
+            vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps))
+            cfac = jax.lax.rsqrt(vc)
+            update = g32 * rfac[..., :, None] * cfac[..., None, :]
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            update = g32 * jax.lax.rsqrt(v)
+            new_s = {"v": v}
+        # relative update clipping (Adafactor's RMS clip)
+        rms = jnp.sqrt(jnp.mean(update * update) + eps)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), new_s
+
+    out = jax.tree.map(upd, params, grads, state.inner,
+                       is_leaf=lambda x: isinstance(x, dict)
+                       and ("vr" in x or "v" in x))
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_inner = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, inner=new_inner)
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,220 @@
+"""Sharding rules: parameter/optimizer/cache PartitionSpec trees.
+
+Axis convention (launch/mesh.py):
+  single-pod mesh (16, 16)        -> ("data", "model")
+  multi-pod  mesh (2, 16, 16)     -> ("pod", "data", "model")
+
+Rules (DESIGN.md §5):
+  * batch dims           -> dp axes ("pod","data")
+  * attention heads, ffn hidden, vocab, MoE experts -> "model"
+  * FSDP (cfg.fsdp): the non-"model" weight dim additionally -> "data"
+  * KV cache: kv-heads on "model" when divisible, else cache seq on "model"
+    (XLA inserts the softmax reductions across the sharded seq dim)
+  * optimizer moments shard exactly like their parameters
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _leaf_pspec(cfg: ModelConfig, path: str, shape: Tuple[int, ...],
+                model_size: int, data_size: int) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    fsdp = cfg.fsdp
+    nd = len(shape)
+
+    def ok(dim: int, axis_size: int) -> bool:
+        return 0 <= dim < nd and shape[dim] % axis_size == 0
+
+    def spec(model_dim: Optional[int], data_dim: Optional[int]) -> P:
+        entries = [None] * nd
+        if model_dim is not None and ok(model_dim, model_size):
+            entries[model_dim] = "model"
+        if fsdp and data_dim is not None and ok(data_dim, data_size) \
+                and entries[data_dim] is None:
+            entries[data_dim] = "data"
+        return P(*entries)
+
+    # embeddings / heads
+    if path.endswith("embed/table"):
+        return spec(model_dim=0, data_dim=1)          # (V, D)
+    if path.endswith("lm_head"):
+        return spec(model_dim=nd - 1, data_dim=nd - 2)  # (D, V)
+    if path.endswith("patch_proj") or path.endswith("frame_proj") \
+            or path.endswith("fuse"):
+        return spec(model_dim=nd - 1, data_dim=nd - 2)
+
+    # attention projections (maybe layer-stacked: leading L dim).
+    # When kv heads don't divide the model axis, the (.., H*hd) -> (H, hd)
+    # reshape cannot preserve head sharding (40 heads % 16 != 0) and XLA
+    # replicates via full-tensor gathers — so these archs replicate the
+    # (small) attention weights over "model" and shard the attention
+    # *compute* by batch/sequence instead (models/layers.py §Perf).
+    if "/attn/" in path or "/cross/" in path:
+        attn_model_ok = cfg.n_kv_heads % model_size == 0 or \
+            not cfg.attn_param_replication
+        if path.endswith("wo"):
+            return spec(model_dim=nd - 2 if attn_model_ok else None,
+                        data_dim=nd - 1)
+        if path[-2:] in ("wq", "wk", "wv"):
+            return spec(model_dim=nd - 1 if attn_model_ok else None,
+                        data_dim=nd - 2)
+        if path[-2:] in ("bq", "bk", "bv"):
+            return spec(model_dim=nd - 1 if attn_model_ok else None,
+                        data_dim=None)
+
+    # dense/shared MLP
+    if "/mlp/" in path or "shared_w" in path:
+        if path.endswith("wd") or path.endswith("w2") \
+                or path.endswith("shared_wd"):
+            return spec(model_dim=nd - 2, data_dim=nd - 1)
+        return spec(model_dim=nd - 1, data_dim=nd - 2)
+
+    # MoE experts: expert dim -> model
+    if "/moe/" in path:
+        if path.endswith("router"):
+            # tiny (D, E): replicate — sharding it drags the full (N, D)
+            # token tensor through gathers at every layer (§Perf)
+            return P(*([None] * nd))
+        if path.endswith("wg") or path.endswith("wu") or path.endswith("wd"):
+            # (L, E, D, F) / (L, E, F, D): experts on model, FSDP on dim -2
+            return spec(model_dim=nd - 3, data_dim=nd - 2)
+
+    # SSD
+    if "/ssd/" in path:
+        if path.endswith("in_proj"):
+            return spec(model_dim=nd - 1, data_dim=nd - 2)
+        if path.endswith("out_proj"):
+            return spec(model_dim=nd - 2, data_dim=nd - 1)
+        if path.endswith("conv_w") or path.endswith("conv_b"):
+            return spec(model_dim=nd - 1, data_dim=None)
+        return P(*([None] * nd))  # a_log, dt_bias, d_skip, norm_scale
+
+    # norms / scalars: replicate
+    return P(*([None] * nd))
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(cfg: ModelConfig, params: Pytree, mesh: Mesh) -> Pytree:
+    model_size = mesh.shape["model"]
+    data_size = mesh.shape["data"]
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, p: _leaf_pspec(cfg, _path_str(kp), p.shape,
+                                  model_size, data_size),
+        params)
+
+
+def param_shardings(cfg: ModelConfig, params: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps),
+                        param_pspecs(cfg, params, mesh))
+
+
+def opt_state_pspecs(cfg: ModelConfig, opt_state, param_specs) -> Any:
+    """Moments shard like params; factored moments drop the last/second-last
+    entry; step scalar replicates."""
+    def factored(ps: P, drop_last: bool) -> P:
+        entries = list(ps) if len(ps) else []
+        if drop_last:
+            entries = entries[:-1]
+        else:
+            entries = entries[:-2] + entries[-1:]
+        return P(*entries)
+
+    def map_inner(inner, spec_tree):
+        if isinstance(inner, dict) and set(inner) == {"m", "v"}:
+            return {"m": spec_tree, "v": spec_tree}
+        # adafactor: per-leaf dicts
+        def per_leaf(s, ps):
+            if isinstance(s, dict) and "vr" in s:
+                return {"vr": factored(ps, drop_last=True),
+                        "vc": factored(ps, drop_last=False)}
+            return {"v": ps}
+        return jax.tree.map(per_leaf, inner, spec_tree,
+                            is_leaf=lambda x: isinstance(x, dict)
+                            and ("vr" in x or "v" in x))
+
+    from repro.train.optimizer import OptState
+    return OptState(step=P(), inner=map_inner(opt_state.inner, param_specs))
+
+
+def sanitize_pspecs(specs: Pytree, shapes: Pytree, mesh: Mesh) -> Pytree:
+    """Drop sharding on any dim whose size isn't divisible by its assigned
+    mesh axes (e.g. batch=1 decode cells can't shard the batch dim)."""
+    def fix(spec: P, shaped) -> P:
+        dims = shaped.shape
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        out = []
+        for dim, entry in zip(dims, entries):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            out.append(entry if dim % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "encdec":
+        specs["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        specs["patches"] = P(dp, None, None)
+    return specs
+
+
+def decode_state_pspecs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    model_size = mesh.shape["model"]
+    specs: Dict[str, P] = {"pos": P()}
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        if cfg.n_kv_heads % model_size == 0:
+            kv_spec = P(None, dp, None, "model", None)
+            sc_spec = P(None, dp, None, "model")
+        else:
+            kv_spec = P(None, dp, "model", None, None)  # shard cache seq
+            sc_spec = P(None, dp, "model", None)
+        specs["k"] = kv_spec
+        specs["v"] = kv_spec
+        specs["k_scale"] = sc_spec
+        specs["v_scale"] = sc_spec
+    if cfg.family in ("ssm", "hybrid"):
+        specs["conv"] = P(None, dp, None, "model")
+        if cfg.ssm_heads % model_size == 0:
+            specs["ssm"] = P(None, dp, "model", None, None)
+        else:
+            specs["ssm"] = P(None, dp, None, None, None)
+    if cfg.family == "hybrid":
+        specs["x0"] = P(dp, None, None)
+    if cfg.family == "encdec":
+        specs["enc_out"] = P(dp, None, None)
+    return specs

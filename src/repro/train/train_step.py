@@ -1,0 +1,49 @@
+"""Train/serve step builders with distribution annotations.
+
+make_train_step returns a pure function (params, opt_state, batch) ->
+(params, opt_state, metrics); jit it with the sharding trees from
+sharding.py (the dry-run does exactly that). Optional hooks:
+
+  * grad_compress: bitplane gradient compression with error feedback over
+    the data axis (paper technique on the collective path) — see
+    train/grad_compress.py; adds a residual pytree to the carried state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train.optimizer import clip_by_global_norm, make_optimizer
+
+Pytree = Any
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4,
+                    max_grad_norm: float = 1.0,
+                    grad_transform: Optional[Callable] = None):
+    opt_init, opt_update = make_optimizer(cfg.optimizer)
+
+    def train_step(params: Pytree, opt_state, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[Pytree, Any, Dict[str, jnp.ndarray]]:
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = opt_update(params, grads, opt_state, lr=lr)
+        out = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, out
+
+    return opt_init, train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params: Pytree, state: Dict[str, jnp.ndarray],
+                   token: jnp.ndarray):
+        return T.decode_step(params, cfg, state, token)
+    return serve_step

@@ -1,0 +1,16 @@
+import repro._x64  # noqa: F401  (f64 for the compression stack)
+
+from repro.transform.hierarchical import (
+    decompose_hb,
+    grid_levels,
+    level_map,
+    pad_to_grid,
+    recompose_hb,
+    unpad,
+)
+from repro.transform.orthogonal import decompose_ob, recompose_ob
+
+__all__ = [
+    "pad_to_grid", "unpad", "grid_levels", "level_map",
+    "decompose_hb", "recompose_hb", "decompose_ob", "recompose_ob",
+]

@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests and
+# benches must see the real single-device CPU. The multi-pod dry-run sets
+# --xla_force_host_platform_device_count=512 in its own entry point only.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

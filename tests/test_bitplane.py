@@ -1,0 +1,76 @@
+"""Bitplane codec invariants: error bounds per retrieved prefix, incremental
+decode consistency, and byte accounting."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.bitplane.encoder import (
+    decode_magnitudes, decode_values, encode_level, plane_bound, planes_needed,
+)
+from repro.bitplane.segments import LevelStream
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       scale=st.floats(min_value=1e-12, max_value=1e12),
+       k=st.integers(0, 48))
+def test_prefix_error_bound(seed, scale, k):
+    rng = np.random.default_rng(seed)
+    c = rng.standard_normal(257) * scale
+    lbp = encode_level(c, nbits=48)
+    v = decode_values(lbp, decode_magnitudes(lbp, k))
+    assert np.abs(v - c).max() <= plane_bound(lbp, k) * (1 + 1e-12)
+
+
+def test_planes_needed_meets_eps():
+    c = np.random.default_rng(1).standard_normal(1000) * 3.7
+    lbp = encode_level(c)
+    for eps in [1.0, 1e-2, 1e-6, 1e-12]:
+        k = planes_needed(lbp, eps)
+        v = decode_values(lbp, decode_magnitudes(lbp, k))
+        assert np.abs(v - c).max() <= eps or k == lbp.nbits
+
+
+def test_incremental_equals_batch():
+    c = np.random.default_rng(2).standard_normal(333) * 11
+    lbp = encode_level(c)
+    mag = None
+    for k in [3, 7, 20, 41]:
+        mag = decode_magnitudes(lbp, k, state=mag,
+                                start=0 if mag is None else prev)  # noqa: F821
+        prev = k
+    batch = decode_magnitudes(lbp, 41)
+    np.testing.assert_array_equal(mag, batch)
+
+
+def test_level_stream_byte_accounting():
+    c = np.random.default_rng(3).standard_normal(4096) * 5
+    lbp = encode_level(c)
+    s = LevelStream(lbp)
+    assert s.bytes_fetched == 0
+    b1 = s.fetch_to_planes(4)
+    assert b1 > 0 and s.bytes_fetched == b1
+    b2 = s.fetch_to_planes(4)   # idempotent
+    assert b2 == 0
+    b3 = s.fetch_to_planes(10)  # only pays for the new planes
+    expected = sum(lbp.plane_nbytes(b) for b in range(4, 10))
+    assert b3 == expected
+    # values reflect 10 planes
+    v = s.values()
+    assert np.abs(v - c).max() <= plane_bound(lbp, 10) * (1 + 1e-12)
+
+
+def test_all_zero_group():
+    lbp = encode_level(np.zeros(100))
+    assert lbp.exponent is None and lbp.total_nbytes == 0
+    s = LevelStream(lbp)
+    assert s.fetch_to_eps(1e-9) == 0
+    assert s.bound == 0.0
+    np.testing.assert_array_equal(s.values(), np.zeros(100))
+
+
+def test_exact_power_of_two_values():
+    c = np.array([4.0, -4.0, 2.0, 1.0, 0.5])
+    lbp = encode_level(c)
+    v = decode_values(lbp, decode_magnitudes(lbp, lbp.nbits))
+    assert np.abs(v - c).max() <= plane_bound(lbp, lbp.nbits) * (1 + 1e-12)

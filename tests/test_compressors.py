@@ -1,0 +1,64 @@
+"""SZ3-like compressor + snapshot/delta progressive schemes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compressors.snapshots import (
+    DeltaSnapshotArchive, SnapshotArchive, default_snapshot_eps,
+)
+from repro.compressors.szlike import sz_compress, sz_decompress
+from repro.data.synthetic import smooth_field
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000),
+       eps_exp=st.integers(-8, 0),
+       ndim=st.integers(1, 3))
+def test_sz_error_bound(seed, eps_exp, ndim):
+    # realistic sizes: per-level zlib headers dominate sub-KB toys
+    shape = {1: (1025,), 2: (65, 33), 3: (17, 9, 9)}[ndim]
+    x = smooth_field(shape, seed, lo=-40.0, hi=75.0)
+    eps = 10.0 ** eps_exp
+    c = sz_compress(x, eps)
+    y = sz_decompress(c)
+    # the REPORTED bound (safe_eps) covers f64 dequant rounding ulps
+    assert np.abs(y - x).max() <= c.safe_eps
+    assert c.nbytes < x.nbytes  # smooth data must actually compress
+
+
+def test_sz_compresses_smooth_data_well():
+    x = smooth_field((4097,), 5, lo=0.0, hi=1.0)
+    c = sz_compress(x, 1e-4)
+    assert c.nbytes < 0.35 * x.nbytes
+
+
+def test_snapshot_reader_bytes_and_bounds():
+    x = smooth_field((2049,), 7, lo=-1.0, hi=1.0)
+    ladder = default_snapshot_eps(2.0, n=6)
+    arch = SnapshotArchive.build(x, ladder)
+    r = arch.open()
+    y, ach = r.request(1e-3)
+    assert np.abs(y - x).max() <= ach <= 1e-3 * (1 + 1e-6)
+    b1 = r.bytes_fetched
+    # a looser later request must not refetch or lose precision
+    y2, ach2 = r.request(1e-1)
+    assert r.bytes_fetched == b1 and ach2 <= 1e-3 * (1 + 1e-6)
+    # a tighter request fetches a whole new snapshot (the PSZ3 redundancy)
+    r.request(1e-5)
+    assert r.bytes_fetched > b1
+
+
+def test_delta_reader_accumulates():
+    x = smooth_field((2049,), 9, lo=-5.0, hi=5.0)
+    ladder = default_snapshot_eps(10.0, n=6)
+    arch = DeltaSnapshotArchive.build(x, ladder)
+    r = arch.open()
+    bytes_seen = 0
+    for eps in [1e-1, 1e-2, 1e-4, 1e-5]:
+        y, ach = r.request(eps)
+        assert np.abs(y - x).max() <= ach * (1 + 1e-9)
+        assert ach <= eps * (1 + 1e-6)
+        assert r.bytes_fetched >= bytes_seen  # monotone, incremental
+        bytes_seen = r.bytes_fetched
+    # delta total for the whole ladder ≈ its archive size, not n× like PSZ3
+    assert r.bytes_fetched <= arch.total_nbytes

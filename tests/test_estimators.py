@@ -1,0 +1,148 @@
+"""Property tests: every estimator is a true upper bound (Theorems 1-6).
+
+For each basis function we sample reconstructed values x, bounds eps, and
+perturbations |xi| <= eps, and assert |f(x + xi) - f(x)| <= Delta(f, x, eps).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimators as est
+
+FLOATS = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                   allow_infinity=False)
+POS = st.floats(min_value=1e-12, max_value=1e4, allow_nan=False,
+                allow_infinity=False)
+UNIT = st.floats(min_value=-1.0, max_value=1.0, allow_nan=False)
+
+# rounding slack: the bound math itself runs in f64
+RTOL = 1e-9
+ULP = np.finfo(np.float64).eps
+
+
+def _le(actual, bound, scale=0.0):
+    """actual <= bound, modulo f64 rounding: RTOL on the bound plus a few
+    ulps of the function-value scale (the test's |f(x')-f(x)| subtraction
+    cancels catastrophically when eps << |f|)."""
+    return actual <= bound * (1 + RTOL) + 8 * ULP * abs(scale) + 1e-300
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=FLOATS, eps=POS, t=UNIT, n=st.integers(min_value=1, max_value=6))
+def test_intpow_bound(x, eps, t, n):
+    xi = t * eps
+    actual = abs((x + xi) ** n - x ** n)
+    bound = float(est.bound_intpow(np.float64(x), np.float64(eps), n))
+    assert _le(actual, bound, scale=abs(x) ** n)
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=st.floats(min_value=0.0, max_value=1e8), eps=POS, t=UNIT,
+       tight=st.booleans())
+def test_sqrt_bound(x, eps, t, tight):
+    xi = t * eps
+    xprime = max(x + xi, 0.0)  # original values are >= 0 in-domain
+    actual = abs(np.sqrt(xprime) - np.sqrt(x))
+    bound = float(est.bound_sqrt(np.float64(x), np.float64(eps), tight=tight))
+    assert _le(actual, bound, scale=np.sqrt(x))
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=FLOATS, eps=POS, t=UNIT, c=FLOATS)
+def test_radical_bound(x, eps, t, c):
+    if abs(x + c) <= eps * 1.0000001 or abs(x + c) < 1e-10:
+        return  # guard region: estimator returns inf (checked separately)
+    xi = t * eps
+    actual = abs(1.0 / (x + xi + c) - 1.0 / (x + c))
+    bound = float(est.bound_radical(np.float64(x), np.float64(eps), c))
+    assert _le(actual, bound, scale=1.0 / abs(x + c))
+
+
+def test_radical_guard_returns_inf():
+    assert np.isinf(est.bound_radical(np.float64(1.0), np.float64(2.0), 0.0))
+    assert np.isinf(est.bound_radical(np.float64(-0.5), np.float64(1.0), 0.5))
+
+
+@settings(max_examples=200, deadline=None)
+@given(data=st.data(), n=st.integers(min_value=1, max_value=5))
+def test_sum_bound(data, n):
+    xs = [data.draw(FLOATS) for _ in range(n)]
+    eps = [data.draw(POS) for _ in range(n)]
+    coeffs = [data.draw(FLOATS) for _ in range(n)]
+    xis = [data.draw(UNIT) * e for e in eps]
+    actual = abs(sum(a * xi for a, xi in zip(coeffs, xis)))
+    bound = float(est.bound_sum(coeffs, [np.float64(e) for e in eps]))
+    assert _le(actual, bound, scale=sum(abs(a) for a in coeffs))
+
+
+@settings(max_examples=200, deadline=None)
+@given(x1=FLOATS, x2=FLOATS, e1=POS, e2=POS, t1=UNIT, t2=UNIT)
+def test_prod_bound(x1, x2, e1, e2, t1, t2):
+    actual = abs((x1 + t1 * e1) * (x2 + t2 * e2) - x1 * x2)
+    bound = float(est.bound_prod(np.float64(x1), np.float64(e1),
+                                 np.float64(x2), np.float64(e2)))
+    assert _le(actual, bound, scale=abs(x1 * x2))
+
+
+@settings(max_examples=200, deadline=None)
+@given(x1=FLOATS, x2=FLOATS, e1=POS, e2=POS, t1=UNIT, t2=UNIT)
+def test_quot_bound(x1, x2, e1, e2, t1, t2):
+    if abs(x2) <= e2 * 1.0000001 or abs(x2) < 1e-10:
+        return
+    actual = abs((x1 + t1 * e1) / (x2 + t2 * e2) - x1 / x2)
+    bound = float(est.bound_quot(np.float64(x1), np.float64(e1),
+                                 np.float64(x2), np.float64(e2)))
+    assert _le(actual, bound, scale=abs(x1 / x2))
+
+
+def test_quot_guard_returns_inf():
+    b = est.bound_quot(np.float64(1.0), np.float64(0.1),
+                       np.float64(0.5), np.float64(1.0))
+    assert np.isinf(b)
+
+
+def test_zero_eps_is_zero_bound():
+    """Exact inputs (masked points) must give exactly-zero bounds, even at
+    singular values like sqrt(0)."""
+    z = np.float64(0.0)
+    assert float(est.bound_sqrt(z, z)) == 0.0
+    assert float(est.bound_intpow(z, z, 3)) == 0.0
+    assert float(est.bound_prod(z, z, z, z)) == 0.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=st.floats(min_value=1e-10, max_value=1e8), eps=POS, t=UNIT)
+def test_log_bound(x, eps, t):
+    """Beyond-paper Log basis: valid upper bound when eps < x."""
+    if eps >= x * 0.999999:
+        assert np.isinf(est.bound_log(np.float64(x), np.float64(eps)))
+        return
+    xi = t * eps
+    actual = abs(np.log(x + xi) - np.log(x))
+    bound = float(est.bound_log(np.float64(x), np.float64(eps)))
+    assert _le(actual, bound, scale=abs(np.log(x)))
+
+
+def test_log_qoi_retrieval():
+    """Log composes through the retrieval loop with guaranteed control."""
+    from repro.core.qoi import Log, Var
+    from repro.core.refactor import refactor_variables
+    from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
+    from repro.data.synthetic import smooth_field
+    data = {"P": smooth_field((2049,), 3, lo=1e3, hi=1e5)}
+    arch = refactor_variables(data, method="hb", mask_zero_velocity=False)
+    expr = Log(Var("P"))
+    res = retrieve_qoi_controlled(arch.open(), [QoIRequest("logP", expr, 1e-4)])
+    assert res.converged
+    truth = np.log(data["P"])
+    approx = np.asarray(expr.value({"P": res.values["P"]}))
+    assert np.abs(truth - approx).max() <= res.est_errors["logP"] * (1 + 1e-9)
+
+
+def test_inf_propagates_without_nan():
+    inf = np.float64(np.inf)
+    z = np.float64(0.0)
+    assert np.isinf(est.bound_prod(z, inf, z, z))
+    assert np.isinf(est.bound_intpow(z, inf, 2))
+    assert np.isinf(est.bound_quot(z, z, np.float64(1.0), inf))
+    assert not np.isnan(est.bound_sqrt(np.float64(4.0), inf))

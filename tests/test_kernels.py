@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.bitplane_pack import bitplane_pack
+from repro.kernels.hier_level import hier_level_surplus
+from repro.kernels.qoi_vtotal import qoi_vtotal_fused
+
+
+# ---------------------------------------------------------------- bitplane --
+@pytest.mark.parametrize("n", [1024, 4096, 8192])
+@pytest.mark.parametrize("nbits", [8, 16, 30])
+def test_bitplane_pack_matches_ref(n, nbits):
+    rng = np.random.default_rng(n + nbits)
+    mag = jnp.asarray(rng.integers(0, 2 ** nbits, size=n), jnp.int32)
+    out = bitplane_pack(mag, nbits=nbits, interpret=True)
+    expect = ref.bitplane_pack_ref(mag, nbits=nbits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("n", [100, 1000, 5000])  # non-aligned lengths
+def test_pack_bitplanes_wrapper_pads(n):
+    rng = np.random.default_rng(n)
+    mag = rng.integers(0, 2 ** 20, size=n)
+    out = np.asarray(ops.pack_bitplanes(jnp.asarray(mag, jnp.int32), nbits=20))
+    expect = np.asarray(ref.bitplane_pack_ref(
+        jnp.asarray(np.pad(mag, (0, (-n) % 32)), jnp.int32), nbits=20))
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_bitplane_pack_roundtrip_bits():
+    """Unpacking the packed planes recovers every magnitude bit."""
+    rng = np.random.default_rng(9)
+    n, nbits = 2048, 24
+    mag = rng.integers(0, 2 ** nbits, size=n)
+    out = np.asarray(ops.pack_bitplanes(jnp.asarray(mag, jnp.int32),
+                                        nbits=nbits))
+    rebuilt = np.zeros(n, dtype=np.int64)
+    for b in range(nbits):
+        words = out[b]
+        bits = (words[:, None] >> np.arange(32)[None, :]) & 1
+        rebuilt |= bits.ravel()[:n].astype(np.int64) << (nbits - 1 - b)
+    np.testing.assert_array_equal(rebuilt, mag)
+
+
+# ------------------------------------------------------------- hier level --
+@pytest.mark.parametrize("batch,m", [(8, 128), (16, 256), (8, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_hier_level_matches_ref(batch, m, dtype):
+    rng = np.random.default_rng(batch + m)
+    even = jnp.asarray(rng.standard_normal((batch, m + 1)), dtype)
+    odd = jnp.asarray(rng.standard_normal((batch, m)), dtype)
+    out = hier_level_surplus(even, odd, interpret=True)
+    expect = ref.hier_level_surplus_ref(even, odd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+
+
+def test_level_surplus_wrapper_row_pad():
+    rng = np.random.default_rng(3)
+    even = jnp.asarray(rng.standard_normal((5, 65)), jnp.float32)
+    odd = jnp.asarray(rng.standard_normal((5, 64)), jnp.float32)
+    out = ops.level_surplus(even, odd)
+    expect = ref.hier_level_surplus_ref(even, odd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+
+
+def test_hier_level_agrees_with_transform():
+    """Kernel output == the surpluses decompose_hb computes at the finest
+    level of a 1D grid (deinterleaved layout equivalence)."""
+    from repro.transform.hierarchical import decompose_hb, level_map
+    rng = np.random.default_rng(11)
+    n = 257
+    x = rng.standard_normal(n)
+    c = np.asarray(decompose_hb(jnp.asarray(x), 1))
+    lm = level_map((n,), 1)
+    even = jnp.asarray(x[0::2][None, :])
+    odd = jnp.asarray(x[1::2][None, :])
+    out = np.asarray(ops.level_surplus(even, odd))[0]
+    np.testing.assert_allclose(out, c[lm == 0], rtol=1e-12)
+
+
+# ------------------------------------------------------------- qoi vtotal --
+@pytest.mark.parametrize("n", [1024, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_qoi_vtotal_matches_ref(n, dtype):
+    rng = np.random.default_rng(n)
+    vx = jnp.asarray(rng.standard_normal(n) * 100, dtype)
+    vy = jnp.asarray(rng.standard_normal(n) * 80, dtype)
+    vz = jnp.asarray(rng.standard_normal(n) * 50, dtype)
+    eps = jnp.asarray([0.5, 0.3, 0.1], dtype)
+    val, bound = qoi_vtotal_fused(vx, vy, vz, eps, interpret=True)
+    ev, eb = ref.qoi_vtotal_ref(vx, vy, vz, eps)
+    np.testing.assert_allclose(np.asarray(val), np.asarray(ev), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(bound), np.asarray(eb), rtol=1e-6)
+
+
+def test_qoi_vtotal_matches_expression():
+    """Kernel == the composable AST estimator (core.qoi) for Vtotal."""
+    from repro.core import ge
+    rng = np.random.default_rng(17)
+    n = 2048
+    fields = {"Vx": rng.standard_normal(n) * 10,
+              "Vy": rng.standard_normal(n) * 10,
+              "Vz": rng.standard_normal(n) * 10}
+    eps = {"Vx": 0.02, "Vy": 0.05, "Vz": 0.01}
+    expr = ge.v_total()
+    ev, eb = expr.eval({k: jnp.asarray(v) for k, v in fields.items()},
+                       {k: jnp.full(n, e) for k, e in eps.items()})
+    val, bound = ops.vtotal_with_bound(
+        jnp.asarray(fields["Vx"]), jnp.asarray(fields["Vy"]),
+        jnp.asarray(fields["Vz"]),
+        jnp.asarray([eps["Vx"], eps["Vy"], eps["Vz"]]))
+    np.testing.assert_allclose(np.asarray(val), np.asarray(ev), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(bound), np.asarray(eb), rtol=1e-12)
+
+
+def test_qoi_vtotal_bound_validity():
+    """Kernel bound is a true upper bound under admissible perturbations."""
+    rng = np.random.default_rng(23)
+    n = 1024
+    vx, vy, vz = (rng.standard_normal(n) for _ in range(3))
+    eps = np.array([0.05, 0.02, 0.04])
+    val, bound = ops.vtotal_with_bound(
+        jnp.asarray(vx), jnp.asarray(vy), jnp.asarray(vz), jnp.asarray(eps))
+    val, bound = np.asarray(val), np.asarray(bound)
+    for trial in range(5):
+        px = vx + rng.uniform(-1, 1, n) * eps[0]
+        py = vy + rng.uniform(-1, 1, n) * eps[1]
+        pz = vz + rng.uniform(-1, 1, n) * eps[2]
+        truth = np.sqrt(px ** 2 + py ** 2 + pz ** 2)
+        finite = np.isfinite(bound)
+        assert np.all(np.abs(truth - val)[finite] <=
+                      bound[finite] * (1 + 1e-9) + 1e-12)

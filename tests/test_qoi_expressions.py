@@ -1,0 +1,82 @@
+"""Composite QoI expressions: bound validity under random perturbations
+(Theorems 7-9, Lemmas 1-2) on the full GE QoI set."""
+import numpy as np
+import pytest
+
+from repro.core import ge
+from repro.core.qoi import (
+    Const, IntPow, Prod, Quot, Sqrt, Sum, Var, frac_pow, magnitude, square,
+)
+from repro.data.synthetic import ge_like_fields
+
+N = 512
+
+
+@pytest.fixture(scope="module")
+def fields():
+    f = ge_like_fields(n=N, seed=3, zero_fraction=0.0)
+    return {k: np.asarray(v) for k, v in f.items()}
+
+
+def _perturb(fields, ebs, seed):
+    rng = np.random.default_rng(seed)
+    return {k: v + rng.uniform(-1, 1, size=v.shape) * ebs[k]
+            for k, v in fields.items()}
+
+
+@pytest.mark.parametrize("qoi_name", ["VTOT", "T", "C", "Mach", "PT", "mu"])
+@pytest.mark.parametrize("rel_eps", [1e-3, 1e-6])
+def test_ge_qoi_bounds_hold(fields, qoi_name, rel_eps):
+    """eval() on perturbed-as-original data never exceeds the bound computed
+    from the (reconstructed, eps) pair."""
+    expr = ge.all_qois()[qoi_name]
+    ebs = {k: rel_eps * (v.max() - v.min()) * np.ones_like(v)
+           for k, v in fields.items()}
+    recon = _perturb(fields, ebs, seed=1)  # pretend this is the reconstruction
+    val, bound = expr.eval(recon, ebs)
+    val, bound = np.asarray(val), np.asarray(bound)
+    assert not np.isnan(bound).any()
+    for trial in range(5):
+        # "original" data = any point within the eps-box around recon
+        orig = _perturb(recon, ebs, seed=100 + trial)
+        truth = np.asarray(expr.value(orig))
+        finite = np.isfinite(bound)
+        assert finite.mean() > 0.95, f"too many inf bounds for {qoi_name}"
+        err = np.abs(truth - val)
+        assert np.all(err[finite] <= bound[finite] * (1 + 1e-9) + 1e-300), \
+            f"{qoi_name}: bound violated by {np.max(err[finite] - bound[finite])}"
+
+
+def test_operator_sugar_matches_nodes(fields):
+    vx = Var("Vx")
+    e1 = vx * vx + 2.0 * vx - 1.0
+    e2 = Sum([Prod(vx, vx), Sum([vx], coeffs=[2.0]), Const(-1.0)])
+    ebs = {k: 0.1 * np.ones_like(v) for k, v in fields.items()}
+    v1, b1 = e1.eval(fields, ebs)
+    v2, b2 = e2.eval(fields, ebs)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2))
+
+
+def test_frac_pow_decomposition(fields):
+    """x^3.5 == x^3 * sqrt(x) on positive values."""
+    p = Var("P")
+    e = frac_pow(p, 3.5)
+    val = np.asarray(e.value(fields))
+    np.testing.assert_allclose(val, fields["P"] ** 3.5, rtol=1e-12)
+
+
+def test_variables_tracking():
+    assert ge.v_total().variables() == frozenset({"Vx", "Vy", "Vz"})
+    assert ge.mach().variables() == frozenset({"Vx", "Vy", "Vz", "P", "D"})
+    assert ge.viscosity().variables() == frozenset({"P", "D"})
+
+
+def test_tight_sqrt_no_looser(fields):
+    """Beyond-paper tight estimator is never looser than the paper's."""
+    ebs = {k: 1e-3 * (v.max() - v.min()) * np.ones_like(v)
+           for k, v in fields.items()}
+    _, b_paper = ge.v_total(tight=False).eval(fields, ebs)
+    _, b_tight = ge.v_total(tight=True).eval(fields, ebs)
+    b_paper, b_tight = np.asarray(b_paper), np.asarray(b_tight)
+    assert np.all(b_tight <= b_paper * (1 + 1e-12))

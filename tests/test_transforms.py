@@ -1,0 +1,97 @@
+"""Multilevel transform invariants: exact round trips, level maps, and the
+HB/OB L-inf error-composition bounds under per-level coefficient noise."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.transform.hierarchical import (
+    decompose_hb, grid_levels, level_map, pad_to_grid, recompose_hb, unpad,
+)
+from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
+
+SHAPES = [(65,), (100,), (33, 17), (9, 9, 9), (20, 13, 7)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("method", ["hb", "ob"])
+def test_round_trip_exact(shape, method):
+    x = np.random.default_rng(42).standard_normal(shape) * 100
+    padded, orig = pad_to_grid(x)
+    L = grid_levels(padded.shape)
+    dec = decompose_hb if method == "hb" else decompose_ob
+    rec = recompose_hb if method == "hb" else recompose_ob
+    c = dec(padded, L)
+    r = np.asarray(rec(c, L))
+    np.testing.assert_allclose(unpad(r, orig), x, atol=1e-10, rtol=0)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_level_map_partitions_grid(shape):
+    padded, _ = pad_to_grid(np.zeros(shape))
+    L = grid_levels(padded.shape)
+    lm = level_map(padded.shape, L)
+    assert lm.shape == padded.shape
+    assert lm.min() == 0 and lm.max() == L
+    # base grid nodes = stride-2^L lattice
+    base = np.zeros(padded.shape, dtype=bool)
+    base[tuple(slice(None, None, 1 << L) for _ in padded.shape)] = True
+    np.testing.assert_array_equal(lm == L, base)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), ndim=st.integers(1, 3))
+def test_hb_linf_bound_composition(seed, ndim):
+    """Perturb each level's coefficients by e_l; reconstruction error must
+    stay below Σ_l e_l (the HB bound the retrieval budgeting relies on)."""
+    rng = np.random.default_rng(seed)
+    shape = tuple([17] * ndim)
+    x = rng.standard_normal(shape) * 10
+    padded, orig = pad_to_grid(x)
+    L = grid_levels(padded.shape)
+    c = np.asarray(decompose_hb(padded, L))
+    lm = level_map(padded.shape, L)
+    e_levels = 10.0 ** rng.uniform(-6, -1, size=L + 1)
+    noise = rng.uniform(-1, 1, size=c.shape)
+    for l in range(L + 1):
+        noise[lm == l] *= e_levels[l]
+    r_noisy = np.asarray(recompose_hb(c + noise, L))
+    r_clean = np.asarray(recompose_hb(c, L))
+    err = np.abs(r_noisy - r_clean).max()
+    assert err <= e_levels.sum() * (1 + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), ndim=st.integers(1, 2))
+def test_ob_linf_bound_composition(seed, ndim):
+    """Same for OB with the (1+κ) amplification (κ = 3^d)."""
+    rng = np.random.default_rng(seed)
+    shape = tuple([17] * ndim)
+    x = rng.standard_normal(shape) * 10
+    padded, orig = pad_to_grid(x)
+    L = grid_levels(padded.shape)
+    c = np.asarray(decompose_ob(padded, L))
+    lm = level_map(padded.shape, L)
+    e_levels = 10.0 ** rng.uniform(-6, -2, size=L + 1)
+    noise = rng.uniform(-1, 1, size=c.shape)
+    for l in range(L + 1):
+        noise[lm == l] *= e_levels[l]
+    r_noisy = np.asarray(recompose_ob(c + noise, L))
+    r_clean = np.asarray(recompose_ob(c, L))
+    err = np.abs(r_noisy - r_clean).max()
+    kappa = ob_kappa(ndim)
+    bound = (1 + kappa) * e_levels[:-1].sum() + e_levels[-1]
+    assert err <= bound * (1 + 1e-9)
+
+
+def test_hb_levels_independent():
+    """HB surpluses depend only on original data — levels are parallel
+    (the TPU-adaptation claim in DESIGN.md)."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(65)
+    padded, _ = pad_to_grid(x)
+    L = grid_levels(padded.shape)
+    c_full = np.asarray(decompose_hb(padded, L))
+    # computing only the finest level must give identical finest surpluses
+    c_one = np.asarray(decompose_hb(padded, 1))
+    lm = level_map(padded.shape, L)
+    np.testing.assert_allclose(c_full[lm == 0], c_one[level_map(padded.shape, 1) == 0])
