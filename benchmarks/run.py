@@ -1,8 +1,10 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only substring]
+    PYTHONPATH=src python -m benchmarks.run [--only substring] [--json PATH]
 
-Prints ``name,us_per_call,derived`` CSV (one row per curve point / cell).
+Prints ``name,us_per_call,derived`` CSV (one row per curve point / cell) and
+writes a machine-readable ``BENCH_kernels.json`` (row name -> us_per_call,
+plus the derived string) so the perf trajectory is tracked across PRs.
 Paper mapping:
   bench_qoi_error            Figs 4/5/6   estimated vs actual QoI errors
   bench_rate_distortion      Figs 2/7/8   bitrate vs requested error, 3 methods
@@ -15,6 +17,7 @@ Roofline/dry-run tables are built by benchmarks/roofline.py from
 results/dryrun.json (see EXPERIMENTS.md §Roofline).
 """
 import argparse
+import json
 import sys
 import time
 
@@ -32,9 +35,16 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path ('' to disable); "
+                         "defaults to BENCH_kernels.json on FULL runs only "
+                         "— a --only run would clobber it with partial rows")
     args = ap.parse_args()
+    if args.json is None:
+        args.json = "" if args.only else "BENCH_kernels.json"
     print("name,us_per_call,derived")
     failures = 0
+    results = {}
     for name in MODULES:
         if args.only and args.only not in name:
             continue
@@ -49,7 +59,13 @@ def main() -> None:
         for row in rows:
             nm, us, derived = row
             print(f"{nm},{us:.1f},{derived}", flush=True)
+            results[nm] = {"us_per_call": round(us, 1), "derived": derived}
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if args.json and results and not failures:
+        # never clobber the cross-PR tracking file with a partial row set
+        with open(args.json, "w") as fh:
+            json.dump(results, fh, indent=1, sort_keys=True)
+        print(f"# wrote {args.json} ({len(results)} rows)", flush=True)
     if failures:
         sys.exit(1)
 

@@ -3,19 +3,35 @@
 Per coefficient group (one multilevel level of one variable):
   * shared exponent  E = ceil(log2 max|c|)  so |c| / 2^E in [0, 1);
   * magnitudes quantised to B-bit fixed point: mag = floor(|c| · 2^{B-E});
-  * plane b (0 = MSB) is bit (B-1-b) of every magnitude, packed 8/byte and
-    zlib-compressed (stands in for the entropy stage — MSB planes of smooth
-    data are mostly zero and compress away);
+  * plane b (0 = MSB) is bit (B-1-b) of every magnitude; 32 coefficients are
+    packed into one uint32 word (bit i of word w = coefficient 32·w + i) and
+    each packed plane is zlib-compressed (stands in for the entropy stage —
+    MSB planes of smooth data are mostly zero and compress away);
   * one packed+compressed sign plane, charged to the first fetched plane.
+
+Device codec architecture (§Perf)
+---------------------------------
+Plane extraction + packing is ONE batched Pallas kernel call per group
+(``kernels/bitplane_pack``); the archival ``nbits=48`` exceeds the TPU's
+32-bit vector registers, so the uint64 magnitudes are split into hi/lo
+uint32 words and packed with two kernel launches (planes 0..B-33 from the
+hi word, B-32..B-1 from the lo word).  zlib touches only the packed words —
+the scalar per-plane ``packbits`` loop of the legacy encoder is gone.
+Decoding mirrors this: ``decode_magnitudes`` inflates the newly fetched
+planes and hands them to ``kernels/ops.unpack_bitplanes``, which ORs every
+plane into the magnitude state in one vectorized op (the
+``bitplane_unpack`` Pallas kernel on TPU, a bit-identical NumPy broadcast
+elsewhere).  All codec arithmetic is integer-exact, so any fetch schedule
+that ends at the same plane counts yields bit-identical magnitudes.
 
 Retrieving the first k planes reconstructs magnitudes truncated below bit
 B-k, so the coefficient error obeys the *closed-form* bound
 
     err(k) <= 2^{E-k} + 2^{E-B}          (truncation + quantisation)
 
-which is what the progressive reader reports to the QoI estimator. The
-device-side hot loop (extract+pack) is the `kernels/bitplane_pack` Pallas
-kernel; this module is the host/archival container.
+which is what the progressive reader reports to the QoI estimator.  This
+module remains the host/archival container; the hot loops live in
+``repro.kernels``.
 """
 from __future__ import annotations
 
@@ -25,7 +41,44 @@ from typing import List, Optional
 
 import numpy as np
 
+import repro._x64  # noqa: F401  (exact f64 quantization on device)
+from repro.kernels import ops
+
 DEFAULT_NBITS = 48  # magnitude planes; int64-safe, ~1e-14 relative floor
+
+# Entropy-stage plane tags: planes at ~maximum entropy (bit density near
+# 0.5 — the vast majority below a float field's noise floor) cannot deflate
+# and are stored raw, skipping both compress and decompress work; sparse
+# planes (MSBs of smooth data) go through zlib.  A compressed plane that
+# fails to shrink falls back to raw, so a plane never costs more than
+# 1 + 4*ceil32(count) bytes.
+_TAG_ZLIB = b"Z"
+_TAG_RAW = b"R"
+_RAW_DENSITY_BAND = (0.45, 0.55)
+
+
+def _popcounts(words: np.ndarray) -> np.ndarray:
+    """Per-plane set-bit counts of (P, W) uint32 packed words."""
+    if hasattr(np, "bitwise_count"):
+        return np.bitwise_count(words).sum(axis=1)
+    return np.unpackbits(words.view(np.uint8), axis=1).sum(axis=1,
+                                                           dtype=np.int64)
+
+
+def _deflate_plane(words_row: np.ndarray, density: float) -> bytes:
+    buf = words_row.tobytes()
+    if _RAW_DENSITY_BAND[0] <= density <= _RAW_DENSITY_BAND[1]:
+        return _TAG_RAW + buf
+    z = zlib.compress(buf, 1)
+    return _TAG_ZLIB + z if len(z) < len(buf) else _TAG_RAW + buf
+
+
+def _inflate_plane(blob: bytes, nwords: int) -> np.ndarray:
+    payload = memoryview(blob)[1:]
+    if blob[:1] == _TAG_RAW:
+        return np.frombuffer(payload, dtype=np.uint32, count=nwords)
+    return np.frombuffer(zlib.decompress(payload), dtype=np.uint32,
+                         count=nwords)
 
 
 @dataclass
@@ -34,7 +87,8 @@ class LevelBitplanes:
     count: int                      # number of coefficients
     exponent: Optional[int]        # None => group is all zeros
     nbits: int
-    planes: List[bytes]            # zlib(packbits(plane)) MSB-first
+    planes: List[bytes]            # tagged packed-word planes, MSB-first:
+                                   #   b"Z" + zlib stream | b"R" + raw words
     plane_raw_bits: int            # uncompressed bits per plane (= count)
     signs: bytes                   # zlib(packbits(c < 0))
 
@@ -62,13 +116,12 @@ def encode_level(coeffs: np.ndarray, nbits: int = DEFAULT_NBITS) -> LevelBitplan
     e = int(np.ceil(np.log2(amax)))
     if 2.0 ** e == amax:  # make |c|/2^E < 1 strict
         e += 1
-    # fixed-point magnitudes; scaling by 2^(nbits-e) is exact (power of two)
-    mag = np.floor(np.abs(c) * np.float64(2.0) ** (nbits - e)).astype(np.uint64)
-    mag = np.minimum(mag, np.uint64(2 ** nbits - 1))
-    planes = []
-    for b in range(nbits):
-        bit = ((mag >> np.uint64(nbits - 1 - b)) & np.uint64(1)).astype(np.uint8)
-        planes.append(zlib.compress(np.packbits(bit).tobytes(), 1))
+    # quantization + hi/lo split + per-plane pack: ONE fused device dispatch
+    # (scaling by 2^(nbits-e) is exact — a power of two)
+    scale = np.float64(2.0) ** (nbits - e)
+    words = ops.encode_magnitude_planes(c, scale, nbits)
+    density = _popcounts(words) / float(n)
+    planes = [_deflate_plane(words[b], density[b]) for b in range(nbits)]
     signs = zlib.compress(np.packbits(c < 0).tobytes(), 1)
     return LevelBitplanes(count=n, exponent=e, nbits=nbits, planes=planes,
                           plane_raw_bits=n, signs=signs)
@@ -78,15 +131,22 @@ def decode_magnitudes(lbp: LevelBitplanes, k: int,
                       state: Optional[np.ndarray] = None,
                       start: int = 0) -> np.ndarray:
     """Accumulate planes [start, k) into a uint64 magnitude state (incremental
-    recomposition — Definition 1(2))."""
+    recomposition — Definition 1(2)).  All newly fetched planes are inflated
+    and OR-combined in ONE vectorized unpack (ops.unpack_bitplanes) instead
+    of a per-plane unpackbits loop."""
     if lbp.exponent is None:
         return np.zeros(lbp.count, dtype=np.uint64)
     mag = state if state is not None else np.zeros(lbp.count, dtype=np.uint64)
-    for b in range(start, min(k, lbp.nbits)):
-        bits = np.unpackbits(
-            np.frombuffer(zlib.decompress(lbp.planes[b]), dtype=np.uint8),
-            count=lbp.count).astype(np.uint64)
-        mag |= bits << np.uint64(lbp.nbits - 1 - b)
+    k = min(k, lbp.nbits)
+    if start >= k:
+        return mag
+    nwords = (lbp.count + 31) // 32
+    words = np.empty((k - start, nwords), dtype=np.uint32)
+    for i, b in enumerate(range(start, k)):
+        words[i] = _inflate_plane(lbp.planes[b], nwords)
+    shifts = np.asarray([lbp.nbits - 1 - b for b in range(start, k)],
+                        dtype=np.int64)
+    mag |= ops.unpack_bitplanes(words, shifts, lbp.count)
     return mag
 
 

@@ -11,6 +11,26 @@ Every representation satisfies Definition 1: refactor into segments, then
 reconstruct from a prefix with a *guaranteed, reported* L-inf bound. The
 retrieval session gives a uniform interface to the QoI-preserved retrieval
 loop (core/retrieval.py).
+
+Incremental recomposition (§Perf, HB linearity)
+-----------------------------------------------
+``recompose_hb`` is linear, and a coefficient field supported on levels
+<= l is untouched by the recompose steps coarser than l.  The HB reader
+therefore represents the reconstruction as the fixed-order sum of
+*per-level contribution fields*
+
+    x̂ = Σ_{l = L..0}  recompose_hb_from(scatter(values_l), start=l)
+
+and caches each contribution keyed by the level's fetched-plane count.
+When a retrieval iteration moves planes of only a few levels, only those
+levels' contributions are recomputed (a partial recompose from level l
+down — for the finest level a pure scatter, no interpolation at all)
+instead of re-running the full multilevel recompose on every iteration.
+Because each contribution is a pure function of that level's decoded
+values, and the codec's integer arithmetic makes decoded values depend
+only on the final plane counts, *any* fetch schedule ending in the same
+plane counts yields a bit-identical reconstruction — asserted against
+from-scratch sessions in tests/test_incremental_recompose.py.
 """
 from __future__ import annotations
 
@@ -33,6 +53,7 @@ from repro.transform.hierarchical import (
     level_map,
     pad_to_grid,
     recompose_hb,
+    recompose_hb_from,
     unpad,
 )
 from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
@@ -153,6 +174,12 @@ class _BitplaneVarReader:
         self.streams = [LevelStream(g) for g in var.groups]
         self._recon: Optional[np.ndarray] = None
         self._dirty = True
+        # HB incremental recomposition state (see module docstring): one
+        # cached contribution field per coefficient group, keyed by the
+        # fetched-plane count it was computed at (-1 = never computed).
+        ngroups = var.levels + 1
+        self._contribs: List[Optional[np.ndarray]] = [None] * ngroups
+        self._contrib_fetched: List[int] = [-1] * ngroups
 
     def reconstruct_at_resolution(self, coarsen: int,
                                   eps: float) -> Tuple[np.ndarray, float]:
@@ -218,6 +245,41 @@ class _BitplaneVarReader:
         for s, budget in zip(self.streams, self._budgets(eps)):
             if s.fetch_to_eps(budget):
                 self._dirty = True
+        if self.var.method == "hb":
+            self._refresh_hb_incremental()
+        else:
+            self._refresh_full()
+        return self._recon, self.achieved_bound()
+
+    def _refresh_hb_incremental(self) -> None:
+        """HB linearity: recompute only the per-level contributions whose
+        plane counts moved (partial recompose from that level down), then
+        re-sum in a fixed coarse->fine order.  Contributions are pure
+        functions of each level's decoded values, so any fetch schedule
+        ending at the same plane counts reconstructs bit-identically."""
+        shape = self.var.padded_shape
+        levels = self.var.levels
+        n = int(np.prod(shape))
+        dirty = [l for l in range(levels + 1)
+                 if self._contribs[l] is None
+                 or self._contrib_fetched[l] != self.streams[l].fetched]
+        for l in dirty:
+            flat = np.zeros(n, dtype=np.float64)
+            flat[self.var.group_indices[l]] = self.streams[l].values()
+            start = min(l, levels - 1)   # base group (index L) needs all steps
+            self._contribs[l] = np.asarray(
+                recompose_hb_from(flat.reshape(shape), levels, start))
+            self._contrib_fetched[l] = self.streams[l].fetched
+        if dirty or self._recon is None:
+            total = np.zeros(shape, dtype=np.float64)
+            for l in range(levels, -1, -1):       # fixed summation order
+                total += self._contribs[l]
+            self._recon = unpad(total, self.var.orig_shape)
+            self._dirty = False
+
+    def _refresh_full(self) -> None:
+        """OB path: the L² corrections couple levels, so reconstruction is
+        from-scratch whenever any stream moved (cached otherwise)."""
         if self._dirty or self._recon is None:
             flat = np.zeros(int(np.prod(self.var.padded_shape)), dtype=np.float64)
             for s, idx in zip(self.streams, self.var.group_indices):
@@ -227,7 +289,6 @@ class _BitplaneVarReader:
                                        self.var.levels))
             self._recon = unpad(rec, self.var.orig_shape)
             self._dirty = False
-        return self._recon, self.achieved_bound()
 
 
 class _SnapshotVarReader:

@@ -31,6 +31,7 @@ from repro.core.qoi import Expr
 
 REDUCTION_FACTOR = 1.5          # c in Alg 4
 MIN_REL_EPS = 2.0 ** -60        # full-fidelity floor
+LADDER_STEPS = 200              # max Alg-4 tightening steps per iteration
 
 
 @dataclass
@@ -161,20 +162,40 @@ def retrieve_qoi_controlled(session,
         for v in involved:
             pt_ebs[v] = float(eb_arrays[v].ravel()[idx]) if \
                 eb_arrays[v].ravel()[idx] == 0.0 else pt_ebs[v]
+        # Evaluate the whole geometric eps-ladder of candidate bound states
+        # in ONE batched _estimate call (§Perf) — the legacy loop dispatched
+        # up to LADDER_STEPS sequential scalar-jit evaluations.  State t is
+        # exactly what t reduction rounds of the sequential loop produce
+        # (cumulative division, per-variable floor clamp, frozen once at or
+        # below the floor — masked points enter at 0 and stay there).
+        ladders: Dict[str, np.ndarray] = {}
+        for v in involved:
+            lad = np.empty(LADDER_STEPS + 1, dtype=np.float64)
+            cur = pt_ebs[v]
+            lad[0] = cur
+            for t in range(1, LADDER_STEPS + 1):
+                if cur > floors[v]:
+                    cur = max(cur / reduction, floors[v])
+                lad[t] = cur
+            ladders[v] = lad
+        _, pb = _estimate(
+            req.expr,
+            {v: np.full(LADDER_STEPS, pt_vals[v]) for v in involved},
+            {v: ladders[v][:LADDER_STEPS] for v in involved})
+        ok = np.asarray(pb) <= tau_abs[qname]
+        progressable = np.zeros(LADDER_STEPS, dtype=bool)
+        for v in involved:
+            progressable |= ladders[v][:LADDER_STEPS] > floors[v]
+        frozen = ~progressable
         at_floor = False
-        for _ in range(200):
-            _, pb = _estimate(req.expr, pt_vals,
-                              {v: np.asarray(pt_ebs[v]) for v in involved})
-            if float(pb) <= tau_abs[qname]:
-                break
-            progressed = False
-            for v in involved:
-                if pt_ebs[v] > floors[v]:
-                    pt_ebs[v] = max(pt_ebs[v] / reduction, floors[v])
-                    progressed = True
-            if not progressed:
-                at_floor = True
-                break
+        if ok.any():
+            t_star = int(np.argmax(ok))       # first state meeting tau
+        elif frozen.any():
+            t_star = int(np.argmax(frozen))   # sequential loop stops here
+            at_floor = True
+        else:
+            t_star = LADDER_STEPS             # exhausted without converging
+        pt_ebs = {v: float(ladders[v][t_star]) for v in involved}
         for v in involved:
             eps[v] = min(eps[v], pt_ebs[v]) if pt_ebs[v] > 0 else eps[v]
         if at_floor:

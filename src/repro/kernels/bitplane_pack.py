@@ -36,12 +36,17 @@ def _kernel(nbits: int, mag_ref, out_ref):
         out_ref[b, :, :] = packed
 
 
-@functools.partial(jax.jit, static_argnames=("nbits", "rows", "interpret"))
-def bitplane_pack(mag: jnp.ndarray, nbits: int = 30,
-                  rows: int = DEFAULT_ROWS,
-                  interpret: bool = True) -> jnp.ndarray:
-    """mag: (N,) int32 non-negative magnitudes, N % (rows*128) == 0.
-    Returns (nbits, N // 32) uint32 packed planes, MSB plane first."""
+def interpret_default() -> bool:
+    """True off-TPU: run Pallas kernels through the interpreter.  Single
+    source of the backend-dispatch policy for the whole kernels package."""
+    return jax.default_backend() != "tpu"
+
+
+def pack_planes_traced(mag: jnp.ndarray, nbits: int, rows: int,
+                       interpret: bool) -> jnp.ndarray:
+    """Traceable pack body (no jit wrapper): lets callers fuse the pallas
+    call into a larger jitted graph (see ops.encode_magnitude_planes).
+    ``mag`` may be any 32-bit integer dtype — only bit extraction happens."""
     n = mag.shape[0]
     if n % (rows * LANES):
         raise ValueError(f"N={n} must be a multiple of rows*128={rows * LANES}")
@@ -58,3 +63,22 @@ def bitplane_pack(mag: jnp.ndarray, nbits: int = 30,
         interpret=interpret,
     )(mag2d)
     return out.reshape(nbits, n // 32)
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "rows", "interpret"))
+def _pack(mag: jnp.ndarray, nbits: int, rows: int,
+          interpret: bool) -> jnp.ndarray:
+    return pack_planes_traced(mag, nbits, rows, interpret)
+
+
+def bitplane_pack(mag: jnp.ndarray, nbits: int = 30,
+                  rows: int = DEFAULT_ROWS,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """mag: (N,) int32 magnitude words (the low 32 bits may be reinterpreted
+    sign bits — only bit extraction is performed), N % (rows*128) == 0.
+    Returns (nbits, N // 32) uint32 packed planes, MSB plane first.
+    ``interpret=None`` auto-detects the backend so direct callers compile on
+    TPU instead of silently interpreting."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _pack(mag, nbits=nbits, rows=rows, interpret=bool(interpret))

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: bitplane unpack — the inverse of ``bitplane_pack``.
+
+Accumulates P packed planes into 32-bit magnitude words in a single pass:
+
+    out[i] = OR_j  bit_i(plane_j) << shift_j
+
+Per-plane shifts are a *dynamic* input (uint32, broadcast across the 128
+lanes) rather than a static tuple, so one compiled kernel serves every fetch
+window ``[start, k)`` of the progressive reader — only the plane count and
+tile geometry are compile-time constants.  Shifts must be < 32; magnitudes
+wider than 32 bits (the archival default is 48) are handled by the caller as
+a hi/lo uint32 split (see ``ops.unpack_bitplanes``).
+
+Tile layout mirrors the pack kernel: packed words (P, ROWS, 4) uint32 in
+VMEM per tile; output (ROWS, 128) uint32.  Unpacking is a dense broadcast
+shift-and-mask over the 32 bit positions of each word — no data-dependent
+control flow, VPU-friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitplane_pack import interpret_default
+
+LANES = 128
+WORDS_PER_ROW = LANES // 32   # 4 uint32 words per 128-lane row
+DEFAULT_ROWS = 8
+
+
+def _kernel(nplanes, words_ref, shift_ref, out_ref):
+    rows = out_ref.shape[0]
+    bit_idx = jnp.arange(32, dtype=jnp.uint32)
+    acc = jnp.zeros((rows, LANES), jnp.uint32)
+    for j in range(nplanes):                             # static unroll
+        w = words_ref[j]                                 # (ROWS, 4) uint32
+        bits = (w[:, :, None] >> bit_idx[None, None, :]) & jnp.uint32(1)
+        acc = acc | (bits.reshape(rows, LANES) << shift_ref[j][None, :])
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def _unpack(words: jnp.ndarray, shifts: jnp.ndarray, rows: int,
+            interpret: bool) -> jnp.ndarray:
+    p, w = words.shape
+    if w % (rows * WORDS_PER_ROW):
+        raise ValueError(
+            f"W={w} must be a multiple of rows*{WORDS_PER_ROW}="
+            f"{rows * WORDS_PER_ROW}")
+    tiles = w // (rows * WORDS_PER_ROW)
+    words3 = words.reshape(p, tiles * rows, WORDS_PER_ROW)
+    shift_b = jnp.broadcast_to(shifts.astype(jnp.uint32)[:, None], (p, LANES))
+    out = pl.pallas_call(
+        functools.partial(_kernel, p),
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((p, rows, WORDS_PER_ROW), lambda i: (0, i, 0)),
+                  pl.BlockSpec((p, LANES), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles * rows, LANES), jnp.uint32),
+        interpret=interpret,
+    )(words3, shift_b)
+    return out.reshape(tiles * rows * LANES)
+
+
+def bitplane_unpack(words: jnp.ndarray, shifts: jnp.ndarray,
+                    rows: int = DEFAULT_ROWS,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """words: (P, W) uint32 packed planes, W % (rows*4) == 0; shifts: (P,)
+    uint32 < 32.  Returns (W*32,) uint32 = OR_j(bits of plane j << shifts[j]).
+    ``interpret=None`` auto-detects the backend (compile on TPU)."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _unpack(jnp.asarray(words, jnp.uint32),
+                   jnp.asarray(shifts), rows=rows, interpret=bool(interpret))

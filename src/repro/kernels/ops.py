@@ -4,21 +4,34 @@ On CPU (this container) the kernels execute in interpret mode — the kernel
 body runs in Python for correctness validation. On a real TPU backend
 ``interpret`` flips to False automatically and the same BlockSpecs drive
 Mosaic compilation.
+
+Codec dispatch policy: the pack/unpack wrappers pick geometry per backend —
+on TPU the canonical 8-row tiles (VMEM-sized, grid-parallel); in interpret
+mode a single whole-array tile, so the traced kernel body appears once in
+the XLA graph instead of once per grid step (compile time, not VMEM, is the
+binding constraint off-TPU).  ``unpack_bitplanes`` additionally falls back
+to a bit-identical vectorized NumPy unpack off-TPU: all codec ops are exact
+integer ops, so kernel and fallback produce equal words — asserted by
+tests/test_incremental_recompose.py.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.bitplane_pack import bitplane_pack
+from repro.kernels.bitplane_pack import (
+    bitplane_pack,
+    interpret_default as _interpret,
+    pack_planes_traced,
+)
+from repro.kernels.bitplane_unpack import WORDS_PER_ROW, bitplane_unpack
 from repro.kernels.hier_level import hier_level_surplus
 from repro.kernels.qoi_vtotal import qoi_vtotal_fused
 
 LANES = 128
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jnp.ndarray, mult: int, value=0):
@@ -30,14 +43,111 @@ def _pad_to(x: jnp.ndarray, mult: int, value=0):
 
 
 def pack_bitplanes(mag: jnp.ndarray, nbits: int = 30,
-                   rows: int = 8) -> jnp.ndarray:
+                   rows: int | None = None) -> jnp.ndarray:
     """Arbitrary-length (N,) int32 -> (nbits, ceil32(N)) packed planes.
-    Pads with zeros (zero magnitudes contribute zero bits)."""
+    Pads with zeros (zero magnitudes contribute zero bits).  ``rows=None``
+    picks the backend-appropriate tile geometry (see module docstring)."""
     mag = jnp.asarray(mag, jnp.int32)
-    padded, n = _pad_to(mag, rows * LANES)
-    out = bitplane_pack(padded, nbits=nbits, rows=rows,
-                        interpret=_interpret())
+    interp = _interpret()
+    if rows is None:
+        if interp:
+            padded, n = _pad_to(mag, LANES)
+            rows = padded.shape[0] // LANES      # one whole-array tile
+        else:
+            rows = 8
+            padded, n = _pad_to(mag, rows * LANES)
+    else:
+        padded, n = _pad_to(mag, rows * LANES)
+    out = bitplane_pack(padded, nbits=nbits, rows=rows, interpret=interp)
     return out[:, : (n + 31) // 32]
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "rows", "interpret"))
+def _encode_planes_fused(c: jnp.ndarray, scale: jnp.ndarray, nbits: int,
+                         rows: int, interpret: bool) -> jnp.ndarray:
+    """Quantize f64 coefficients to nbits fixed point and pack every plane,
+    all in ONE device dispatch (hi/lo uint32 split for nbits > 32)."""
+    mag = jnp.floor(jnp.abs(c) * scale)
+    mag = jnp.minimum(mag, np.float64(2.0 ** nbits - 1)).astype(jnp.uint64)
+    lo = (mag & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32)
+    if nbits <= 32:
+        return pack_planes_traced(lo, nbits, rows, interpret)
+    hi = (mag >> jnp.uint64(32)).astype(jnp.uint32)
+    hi_planes = pack_planes_traced(hi, nbits - 32, rows, interpret)
+    lo_planes = pack_planes_traced(lo, 32, rows, interpret)
+    return jnp.concatenate([hi_planes, lo_planes], axis=0)
+
+
+def encode_magnitude_planes(c: np.ndarray, scale: float,
+                            nbits: int) -> np.ndarray:
+    """(N,) float64 coefficients -> (nbits, ceil32(N)) uint32 packed planes
+    of mag = min(floor(|c|*scale), 2^nbits - 1), MSB plane first.  The whole
+    refactor hot loop — quantization, hi/lo split and per-plane packing —
+    runs as a single fused jit dispatch; only zlib stays on the host."""
+    c = jnp.asarray(c, jnp.float64)
+    interp = _interpret()
+    if interp:
+        padded, n = _pad_to(c, LANES)
+        rows = padded.shape[0] // LANES      # one whole-array tile
+    else:
+        rows = 8
+        padded, n = _pad_to(c, rows * LANES)
+    out = _encode_planes_fused(padded, jnp.float64(scale), nbits=nbits,
+                               rows=rows, interpret=interp)
+    return np.asarray(out)[:, : (n + 31) // 32]
+
+
+def unpack_bitplanes(words, shifts, count: int) -> np.ndarray:
+    """(P, ceil32(count)) uint32 packed planes + per-plane left shifts (< 64)
+    -> (count,) uint64: OR over planes of (unpacked bits << shift).
+
+    One vectorized call replaces the per-plane unpackbits loop of the legacy
+    decoder.  On TPU this drives the ``bitplane_unpack`` Pallas kernel
+    (shifts >= 32 via a hi/lo uint32 split); off-TPU a byte-plane NumPy
+    accumulation — integer ops only, so both paths agree exactly.
+    """
+    words = np.ascontiguousarray(words, dtype=np.uint32)
+    shifts = np.asarray(shifts, dtype=np.int64)
+    if count == 0 or words.shape[0] == 0:
+        return np.zeros(count, dtype=np.uint64)
+    if not _interpret():
+        return _unpack_kernel_u64(words, shifts, count)
+    # Byte-plane accumulation (little-endian hosts): OR each plane into byte
+    # column shift//8 of the uint64 output at sub-shift shift%8 — cheap uint8
+    # passes, integer-exact by construction.  Bits are inflated per byte
+    # column (<= 8 planes at a time), bounding the transient to ~8 planes'
+    # bits even for archival-scale fields.
+    nwords = words.shape[1]
+    out = np.zeros(nwords * 32, dtype=np.uint64)
+    out_bytes = out.view(np.uint8).reshape(-1, 8)
+    q = shifts >> 3
+    r = (shifts & 7).astype(np.uint8)
+    for col in np.unique(q):
+        sel = q == col
+        bits = np.unpackbits(words[sel].view(np.uint8), axis=1,
+                             bitorder="little")
+        out_bytes[:, col] = np.bitwise_or.reduce(bits << r[sel, None], axis=0)
+    return out[:count]
+
+
+def _unpack_kernel_u64(words: np.ndarray, shifts: np.ndarray,
+                       count: int, rows: int = 8) -> np.ndarray:
+    """TPU path: split planes into hi (shift >= 32) / lo words, one kernel
+    call each, recombine into uint64 magnitudes."""
+    out = np.zeros(count, dtype=np.uint64)
+    hi = shifts >= 32
+    for sel, base in ((hi, 32), (~hi, 0)):
+        if not np.any(sel):
+            continue
+        w = words[sel]
+        pad = (-w.shape[1]) % (rows * WORDS_PER_ROW)
+        if pad:
+            w = np.pad(w, ((0, 0), (0, pad)))
+        grp = bitplane_unpack(jnp.asarray(w),
+                              jnp.asarray(shifts[sel] - base, jnp.uint32),
+                              rows=rows)
+        out |= np.asarray(grp, dtype=np.uint64)[:count] << np.uint64(base)
+    return out
 
 
 def level_surplus(x_even: jnp.ndarray, x_odd: jnp.ndarray,

@@ -17,6 +17,20 @@ def bitplane_pack_ref(mag: jnp.ndarray, nbits: int = 30) -> jnp.ndarray:
     return jnp.stack(planes)
 
 
+def bitplane_unpack_ref(words: jnp.ndarray, shifts) -> jnp.ndarray:
+    """(P, W) uint32 packed planes + (P,) left shifts (< 64) ->
+    (W*32,) uint64 OR-accumulated magnitudes (inverse of pack)."""
+    p, w = words.shape
+    bit_idx = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((jnp.asarray(words, jnp.uint32)[:, :, None] >> bit_idx)
+            & jnp.uint32(1)).reshape(p, w * 32).astype(jnp.uint64)
+    shifted = bits << jnp.asarray(shifts, jnp.uint64)[:, None]
+    out = jnp.zeros(w * 32, jnp.uint64)
+    for j in range(p):
+        out = out | shifted[j]
+    return out
+
+
 def hier_level_surplus_ref(x_even: jnp.ndarray,
                            x_odd: jnp.ndarray) -> jnp.ndarray:
     return x_odd - 0.5 * (x_even[:, :-1] + x_even[:, 1:])

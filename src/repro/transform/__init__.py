@@ -6,11 +6,13 @@ from repro.transform.hierarchical import (
     level_map,
     pad_to_grid,
     recompose_hb,
+    recompose_hb_from,
     unpad,
 )
 from repro.transform.orthogonal import decompose_ob, recompose_ob
 
 __all__ = [
     "pad_to_grid", "unpad", "grid_levels", "level_map",
-    "decompose_hb", "recompose_hb", "decompose_ob", "recompose_ob",
+    "decompose_hb", "recompose_hb", "recompose_hb_from",
+    "decompose_ob", "recompose_ob",
 ]

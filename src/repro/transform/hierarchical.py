@@ -151,16 +151,33 @@ def decompose_hb(x: Array, levels: int) -> Array:
     return x
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def recompose_hb(c: Array, levels: int) -> Array:
-    """Inverse of decompose_hb; must run coarse -> fine."""
-    for l in range(levels - 1, -1, -1):
+def _recompose_steps(c: Array, start: int) -> Array:
+    """Recompose steps start..0 (coarse -> fine), shared by the full and
+    partial entry points so both produce bitwise-identical op graphs."""
+    for l in range(start, -1, -1):
         s = 1 << l
         view = c[_view_slices(c.ndim, s)]
         pred = interp_up(view[_view_slices(c.ndim, 2)])
         mask = jnp.asarray(_new_node_mask(view.shape))
         c = c.at[_view_slices(c.ndim, s)].set(jnp.where(mask, view + pred, view))
     return c
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def recompose_hb(c: Array, levels: int) -> Array:
+    """Inverse of decompose_hb; must run coarse -> fine."""
+    return _recompose_steps(c, levels - 1)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def recompose_hb_from(c: Array, levels: int, start: int) -> Array:
+    """Partial recompose: only steps start..0.  For a coefficient field
+    supported on levels <= start (zero on all strictly-coarser grids) this
+    is *bitwise* identical to the full recompose — the skipped coarse steps
+    see an all-zero view and are exact no-ops — while costing only the fine
+    half of the step ladder.  This is what makes per-level incremental
+    reconstruction (core/refactor.py) both cheap and reproducible."""
+    return _recompose_steps(c, min(start, levels - 1))
 
 
 def hb_error_bound(level_bounds: List[float]) -> float:

@@ -1,0 +1,129 @@
+"""Fallback for ``hypothesis`` when it is not installed.
+
+The property tests only need a small slice of the API (``given`` /
+``settings`` / ``strategies.integers|floats|booleans|data``).  When the real
+package is available it is re-exported unchanged; otherwise a deterministic
+seeded sampler stands in so the suite still exercises each property over a
+spread of values (including the range endpoints) instead of being skipped.
+"""
+from __future__ import annotations
+
+import importlib.util
+
+if importlib.util.find_spec("hypothesis") is not None:
+    from hypothesis import given, settings, strategies  # noqa: F401
+else:
+    import functools
+    import math
+    import zlib
+
+    import numpy as np
+
+    _MAX_EXAMPLES_CAP = 50  # keep the fallback sweep cheap
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _DataObject:
+        """Stand-in for hypothesis' interactive data() draws."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    def _draw_float(rng, lo, hi):
+        # Mix uniform and log-magnitude draws plus endpoints so wide ranges
+        # like [1e-12, 1e12] are covered across scales, as hypothesis does.
+        mode = rng.integers(0, 4)
+        if mode == 0:
+            return float(lo)
+        if mode == 1:
+            return float(hi)
+        if mode == 2 or lo == hi:
+            return float(rng.uniform(lo, hi))
+        # log-magnitude draw within [lo, hi]
+        amax = max(abs(lo), abs(hi))
+        if amax == 0.0:
+            return 0.0
+        if lo <= 0.0 <= hi:
+            # range spans zero: sweep magnitudes down to a small floor so
+            # near-zero values are actually exercised
+            amin = min(1e-12, amax)
+        else:
+            amin = max(min(abs(lo), abs(hi)), 1e-300)
+        mag = math.exp(rng.uniform(math.log(amin), math.log(amax)))
+        sign = -1.0 if (lo < 0 and (hi <= 0 or rng.integers(0, 2))) else 1.0
+        return float(np.clip(sign * mag, lo, hi))
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+                   allow_infinity=False, width=64):
+            return _Strategy(lambda rng: _draw_float(rng, float(min_value),
+                                                     float(max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    strategies = _StrategiesModule()
+
+    class settings:
+        """Decorator recording max_examples on the (already-wrapped) test."""
+
+        def __init__(self, max_examples=20, deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._shim_max_examples = self.max_examples
+            return fn
+
+    import inspect
+
+    def given(**strats):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_shim_max_examples", 20),
+                        _MAX_EXAMPLES_CAP)
+                for i in range(n):
+                    # crc32, not hash(): stable across processes so a failing
+                    # draw reproduces under any PYTHONHASHSEED
+                    key = f"{fn.__module__}.{fn.__name__}:{i}".encode()
+                    rng = np.random.default_rng(zlib.crc32(key))
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the property args from pytest's fixture resolution (the
+            # shim supplies them); keep any remaining params visible
+            params = [p for name, p in
+                      inspect.signature(fn).parameters.items()
+                      if name not in strats]
+            wrapper.__signature__ = inspect.Signature(params)
+            del wrapper.__wrapped__
+            return wrapper
+        return decorate

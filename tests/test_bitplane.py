@@ -2,7 +2,7 @@
 decode consistency, and byte accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.bitplane.encoder import (
     decode_magnitudes, decode_values, encode_level, plane_bound, planes_needed,

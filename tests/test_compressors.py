@@ -1,7 +1,7 @@
 """SZ3-like compressor + snapshot/delta progressive schemes."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.compressors.snapshots import (
     DeltaSnapshotArchive, SnapshotArchive, default_snapshot_eps,

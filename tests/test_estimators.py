@@ -5,7 +5,7 @@ perturbations |xi| <= eps, and assert |f(x + xi) - f(x)| <= Delta(f, x, eps).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import estimators as est
 

@@ -1,0 +1,244 @@
+"""Device-codec and incremental-reconstruction invariants.
+
+1. The Pallas pack/unpack kernels round-trip and match a pure-NumPy oracle
+   of the archived word format (bit i of word w = coefficient 32*w + i).
+2. ``encode_level``'s batched kernel path produces exactly the magnitudes a
+   scalar per-plane NumPy encoder would.
+3. Incremental reconstruction (per-level contribution caching under HB
+   linearity) is *bit-identical* to a from-scratch session across
+   randomized fetch schedules, for all four progressive methods.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.bitplane.encoder import decode_magnitudes, decode_values, encode_level
+from repro.core.refactor import refactor_variables
+from repro.kernels import ops
+from repro.kernels.bitplane_unpack import bitplane_unpack
+from repro.transform.hierarchical import recompose_hb, recompose_hb_from
+
+METHODS = ("hb", "ob", "psz3", "psz3_delta")
+
+
+# ------------------------------------------------------------------ oracle --
+
+
+def _pack_oracle(mag: np.ndarray, nbits: int) -> np.ndarray:
+    """Scalar-loop NumPy packer: the ground truth for the archived format."""
+    n = mag.size
+    nwords = (n + 31) // 32
+    out = np.zeros((nbits, nwords), dtype=np.uint32)
+    mag = np.asarray(mag, dtype=np.uint64)
+    for b in range(nbits):
+        bits = ((mag >> np.uint64(nbits - 1 - b)) & np.uint64(1)).astype(np.uint32)
+        padded = np.zeros(nwords * 32, dtype=np.uint32)
+        padded[:n] = bits
+        out[b] = (padded.reshape(nwords, 32)
+                  << np.arange(32, dtype=np.uint32)[None, :]).sum(
+                      axis=1, dtype=np.uint32)
+    return out
+
+
+def pack_magnitude_planes(mag: np.ndarray, nbits: int) -> np.ndarray:
+    """(N,) uint64 magnitudes -> (nbits, ceil32(N)) uint32 packed planes
+    via the pack kernel wrapper, hi/lo uint32 split for nbits > 32 (mirrors
+    the fused encode path's split convention)."""
+    mag = np.asarray(mag, dtype=np.uint64)
+    lo = (mag & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+    if nbits <= 32:
+        return np.asarray(ops.pack_bitplanes(lo, nbits=nbits))
+    hi = (mag >> np.uint64(32)).astype(np.uint32).view(np.int32)
+    return np.concatenate([np.asarray(ops.pack_bitplanes(hi, nbits=nbits - 32)),
+                           np.asarray(ops.pack_bitplanes(lo, nbits=32))],
+                          axis=0)
+
+
+def _unpack_oracle(words: np.ndarray, shifts, count: int) -> np.ndarray:
+    out = np.zeros(count, dtype=np.uint64)
+    for row, sh in zip(words, shifts):
+        bits = ((row[:, None] >> np.arange(32, dtype=np.uint32)) &
+                np.uint32(1)).ravel()[:count]
+        out |= bits.astype(np.uint64) << np.uint64(sh)
+    return out
+
+
+# ----------------------------------------------------------- kernel round --
+
+
+@pytest.mark.parametrize("n,nbits", [(1024, 8), (2048, 30), (4096, 32)])
+def test_pack_unpack_kernel_roundtrip(n, nbits):
+    rng = np.random.default_rng(n + nbits)
+    mag = rng.integers(0, 2 ** nbits, size=n, dtype=np.uint64)
+    packed = np.asarray(ops.pack_bitplanes(
+        jnp.asarray(mag & np.uint64(0xFFFFFFFF), jnp.uint32).view(jnp.int32),
+        nbits=nbits))
+    np.testing.assert_array_equal(packed, _pack_oracle(mag, nbits))
+    shifts = np.array([nbits - 1 - b for b in range(nbits)]) % 32
+    pad = (-packed.shape[1]) % (8 * 4)
+    w = np.pad(packed, ((0, 0), (0, pad)))
+    out = np.asarray(bitplane_unpack(jnp.asarray(w),
+                                     jnp.asarray(shifts, jnp.uint32),
+                                     rows=8, interpret=True))[:n]
+    expect = _unpack_oracle(packed, shifts, n)
+    np.testing.assert_array_equal(out.astype(np.uint64), expect)
+
+
+def test_unpack_dispatch_matches_kernel_hi_lo_split():
+    """ops.unpack_bitplanes' NumPy path == the hi/lo-split kernel path for
+    shifts spanning the full 48-bit range."""
+    rng = np.random.default_rng(5)
+    n, nbits = 1536, 48
+    mag = rng.integers(0, 2 ** 48, size=n, dtype=np.uint64)
+    words = pack_magnitude_planes(mag, nbits)
+    shifts = np.array([nbits - 1 - b for b in range(nbits)])
+    via_np = ops.unpack_bitplanes(words, shifts, n)
+    via_kernel = ops._unpack_kernel_u64(np.asarray(words, np.uint32),
+                                        shifts, n)
+    np.testing.assert_array_equal(via_np, via_kernel)
+    np.testing.assert_array_equal(via_np, mag)
+
+
+def test_pack_magnitude_planes_matches_oracle_48bit():
+    rng = np.random.default_rng(11)
+    n = 777
+    mag = rng.integers(0, 2 ** 48, size=n, dtype=np.uint64)
+    np.testing.assert_array_equal(pack_magnitude_planes(mag, 48),
+                                  _pack_oracle(mag, 48))
+
+
+def test_encode_level_matches_scalar_oracle():
+    """Batched encoder == an independent scalar fixed-point encoder."""
+    rng = np.random.default_rng(3)
+    c = rng.standard_normal(513) * 7.3
+    lbp = encode_level(c, nbits=48)
+    # oracle magnitudes straight from the definition
+    e = lbp.exponent
+    mag = np.minimum(np.floor(np.abs(c) * 2.0 ** (48 - e)).astype(np.uint64),
+                     np.uint64(2 ** 48 - 1))
+    np.testing.assert_array_equal(decode_magnitudes(lbp, 48), mag)
+    # prefix decode equals oracle truncation for a few ks
+    for k in (1, 7, 19, 33, 47):
+        trunc = (mag >> np.uint64(48 - k)) << np.uint64(48 - k)
+        np.testing.assert_array_equal(decode_magnitudes(lbp, k), trunc)
+    v = decode_values(lbp, decode_magnitudes(lbp, 48))
+    assert np.abs(v - c).max() <= 2.0 ** (e - 48) * (1 + 1e-12)
+
+
+# ------------------------------------------------- partial recompose ------
+
+
+@pytest.mark.parametrize("shape", [(257,), (65, 33)])
+def test_partial_recompose_identity_on_level_support(shape):
+    """recompose_hb_from(start=l) is bitwise recompose_hb for fields
+    supported on levels <= l (the skipped coarse steps are exact no-ops)."""
+    from repro.transform.hierarchical import grid_levels, level_map
+    rng = np.random.default_rng(1)
+    levels = grid_levels(shape)
+    lmap = level_map(shape, levels)
+    for l in range(levels + 1):
+        field = rng.standard_normal(shape)
+        field[lmap != min(l, levels)] = 0.0
+        full = np.asarray(recompose_hb(jnp.asarray(field), levels))
+        part = np.asarray(recompose_hb_from(jnp.asarray(field), levels,
+                                            min(l, levels - 1)))
+        np.testing.assert_array_equal(full, part)
+
+
+# ------------------------------------------- incremental bit-identity -----
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_incremental_equals_from_scratch(method, seed):
+    """Randomized decreasing fetch schedules end bit-identical to a fresh
+    session that jumps straight to the final bound (Definition 1(2))."""
+    rng = np.random.default_rng(seed)
+    fields = {"Vx": rng.standard_normal(1200) * 3,
+              "Vy": rng.standard_normal(1200)}
+    arch = refactor_variables(fields, method=method, n_snapshots=6,
+                              mask_zero_velocity=False)
+    n_steps = int(rng.integers(2, 6))
+    eps = np.sort(10.0 ** rng.uniform(-7, -0.5, size=n_steps))[::-1]
+    inc = arch.open()
+    for e in eps:
+        for name in fields:
+            da, ba = inc.reconstruct(name, e)
+    scratch = arch.open()
+    for name in fields:
+        da, ba = inc.reconstruct(name, eps[-1])
+        db, bb = scratch.reconstruct(name, eps[-1])
+        assert np.array_equal(da, db), (method, name)
+        assert ba == bb
+        assert np.abs(da - fields[name]).max() <= ba * (1 + 1e-9)
+
+
+def test_incremental_2d_hb_with_resolution_interleave():
+    """Resolution-progression fetches interleaved with full requests must be
+    picked up by the contribution cache (plane counts, not dirty flags)."""
+    rng = np.random.default_rng(4)
+    fields = {"W": rng.standard_normal((33, 33)).cumsum(axis=0)}
+    arch = refactor_variables(fields, method="hb", mask_zero_velocity=False)
+    inc = arch.open()
+    inc.reconstruct("W", 1e-1)
+    inc.reconstruct_at_resolution("W", coarsen=1, eps=1e-4)
+    da, ba = inc.reconstruct("W", 1e-6)
+    scratch = arch.open()
+    scratch.reconstruct_at_resolution("W", coarsen=1, eps=1e-4)
+    db, bb = scratch.reconstruct("W", 1e-6)
+    assert np.array_equal(da, db)
+    assert ba == bb
+
+
+def test_ladder_reassign_matches_sequential_reference():
+    """The batched Alg-4 ladder picks exactly the state the sequential
+    reduce-check loop would."""
+    from repro.core.retrieval import (LADDER_STEPS, REDUCTION_FACTOR,
+                                      _estimate)
+    from repro.core import ge
+    expr = ge.v_total()
+    pt_vals = {"Vx": np.float64(2.0), "Vy": np.float64(-1.0),
+               "Vz": np.float64(0.5)}
+    floors = {v: 1e-9 for v in pt_vals}
+    for tau in (1e-1, 1e-3, 1e-6):
+        pt = {v: 0.5 for v in pt_vals}
+        # sequential reference (the legacy loop)
+        seq = dict(pt)
+        for _ in range(LADDER_STEPS):
+            _, pb = _estimate(expr, pt_vals,
+                              {v: np.asarray(seq[v]) for v in seq})
+            if float(pb) <= tau:
+                break
+            progressed = False
+            for v in seq:
+                if seq[v] > floors[v]:
+                    seq[v] = max(seq[v] / REDUCTION_FACTOR, floors[v])
+                    progressed = True
+            if not progressed:
+                break
+        # batched ladder (mirrors core.retrieval)
+        ladders = {}
+        for v in pt:
+            lad = np.empty(LADDER_STEPS + 1)
+            cur = pt[v]
+            lad[0] = cur
+            for t in range(1, LADDER_STEPS + 1):
+                if cur > floors[v]:
+                    cur = max(cur / REDUCTION_FACTOR, floors[v])
+                lad[t] = cur
+            ladders[v] = lad
+        _, pb = _estimate(expr,
+                          {v: np.full(LADDER_STEPS, pt_vals[v]) for v in pt},
+                          {v: ladders[v][:LADDER_STEPS] for v in pt})
+        ok = np.asarray(pb) <= tau
+        prog = np.zeros(LADDER_STEPS, dtype=bool)
+        for v in pt:
+            prog |= ladders[v][:LADDER_STEPS] > floors[v]
+        if ok.any():
+            t_star = int(np.argmax(ok))
+        elif (~prog).any():
+            t_star = int(np.argmax(~prog))
+        else:
+            t_star = LADDER_STEPS
+        for v in pt:
+            assert ladders[v][t_star] == seq[v], (tau, v)

@@ -2,7 +2,7 @@
 HB/OB L-inf error-composition bounds under per-level coefficient noise."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.transform.hierarchical import (
     decompose_hb, grid_levels, level_map, pad_to_grid, recompose_hb, unpad,
