@@ -1,0 +1,77 @@
+"""Store subsystem micro-benches: container round-trip throughput, segment
+fetch latency (cold demand vs warm prefetched), and crc32c hashing rate —
+the transport-path numbers tracked across PRs in BENCH_kernels.json."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.refactor import refactor_variables
+from repro.data.synthetic import ge_like_fields
+from repro.store import crc32c, open_archive, save_archive
+
+
+def run():
+    rows = []
+    fields = ge_like_fields(n=1 << 16, seed=0)
+    vel = {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+    arch = refactor_variables(vel, method="hb")
+    fd, path = tempfile.mkstemp(suffix=".prs")
+    os.close(fd)
+    try:
+        dt_save, nbytes = timed(save_archive, arch, path)
+        rows.append(("store/save_archive/n=65536x3", dt_save * 1e6,
+                     f"bytes={nbytes};"
+                     f"MBps={nbytes / dt_save / 1e6:.0f}"))
+
+        dt_open, sa = timed(open_archive, path)
+        nseg = len(sa.fetcher.index)
+        rows.append(("store/open_archive", dt_open * 1e6,
+                     f"segments={nseg}"))
+
+        # cold full-archive verified read-through (mmap + crc + no decode)
+        t0 = time.perf_counter()
+        total = 0
+        for key in sa.fetcher.index:
+            total += len(sa.fetcher.fetch(key))
+        dt_cold = time.perf_counter() - t0
+        rows.append(("store/fetch_all_verified", dt_cold * 1e6,
+                     f"bytes={total};MBps={total / dt_cold / 1e6:.0f}"))
+        sa.close()
+
+        # demand vs prefetched single-segment latency (file store, no link)
+        sa = open_archive(path, prefetch_workers=2)
+        keys = sorted(sa.fetcher.index, key=lambda k: -sa.fetcher.index[k].size)
+        demand = min(timed(sa.fetcher.fetch, keys[0])[0] for _ in range(5))
+        sa.fetcher.prefetch([keys[1]])
+        sa.fetcher.drain()
+        warm, _ = timed(sa.fetcher.fetch, keys[1])
+        rows.append(("store/fetch_latency_demand", demand * 1e6, "cold"))
+        rows.append(("store/fetch_latency_prefetched", warm * 1e6,
+                     f"speedup={demand / max(warm, 1e-9):.1f}"))
+        # prefetch hit rate over a session that pulls everything through hints
+        session = sa.open()
+        for eps in (1e-2, 1e-4, 1e-6):
+            for v in vel:
+                session.prefetch(v, eps)
+                session.reconstruct(v, eps)
+        st = sa.fetcher.stats
+        rows.append(("store/session_hit_rate", st.demand_wait_s * 1e6,
+                     f"hit_rate={st.hit_rate:.2f};"
+                     f"predicted={st.prefetch_hits};"
+                     f"demand={st.demand_fetches}"))
+        sa.close()
+    finally:
+        if os.path.exists(path):
+            os.unlink(path)
+
+    buf = np.random.default_rng(0).integers(
+        0, 256, 1 << 22, dtype=np.uint8).tobytes()
+    dt_crc = min(timed(crc32c, buf)[0] for _ in range(3))
+    rows.append(("store/crc32c/4MiB", dt_crc * 1e6,
+                 f"MBps={len(buf) / dt_crc / 1e6:.0f}"))
+    return rows

@@ -11,6 +11,9 @@ Paper mapping:
   bench_basis                Fig 3        PMGARD-OB vs -HB estimate gap
   bench_refactor_time        Table IV     refactor + retrieval times
   bench_transfer             Fig 9        modelled remote transfer, 2.02x claim
+                                          + real store/WAN prefetch overlap
+  bench_store                (impl)       container round-trip, fetch latency,
+                                          prefetch hit rate, crc32c
   bench_kernels              (impl)       kernel hot-loop micro-benches
   bench_training_integration (beyond)     progressive ckpt + grad compression
 Roofline/dry-run tables are built by benchmarks/roofline.py from
@@ -27,6 +30,7 @@ MODULES = [
     "bench_basis",
     "bench_refactor_time",
     "bench_transfer",
+    "bench_store",
     "bench_kernels",
     "bench_training_integration",
 ]

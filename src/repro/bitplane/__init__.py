@@ -1,12 +1,21 @@
 from repro.bitplane.encoder import (
     LevelBitplanes,
+    PlaneGroupMeta,
+    accumulate_planes,
     decode_magnitudes,
     encode_level,
     plane_bound,
+    values_from_planes,
 )
-from repro.bitplane.segments import LevelStream, PlaneSegment
+from repro.bitplane.segments import (
+    InMemoryPlaneSource,
+    LevelStream,
+    PlaneSegment,
+    PlaneSource,
+)
 
 __all__ = [
-    "LevelBitplanes", "encode_level", "decode_magnitudes", "plane_bound",
-    "LevelStream", "PlaneSegment",
+    "LevelBitplanes", "PlaneGroupMeta", "encode_level", "decode_magnitudes",
+    "accumulate_planes", "values_from_planes", "plane_bound",
+    "LevelStream", "PlaneSegment", "PlaneSource", "InMemoryPlaneSource",
 ]

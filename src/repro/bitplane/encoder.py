@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -81,6 +81,20 @@ def _inflate_plane(blob: bytes, nwords: int) -> np.ndarray:
                          count=nwords)
 
 
+@dataclass(frozen=True)
+class PlaneGroupMeta:
+    """Payload-free description of one encoded coefficient group — everything
+    a progressive reader needs to plan fetches (sizes, bounds) and decode
+    received segments, without holding the plane bytes themselves.  This is
+    what the store container serializes into its manifest; `LevelBitplanes`
+    is the in-memory (meta + payload) archival form."""
+    count: int
+    exponent: Optional[int]        # None => group is all zeros
+    nbits: int
+    plane_sizes: Tuple[int, ...]   # encoded bytes per plane, MSB-first
+    sign_size: int
+
+
 @dataclass
 class LevelBitplanes:
     """Encoded bitplanes of one coefficient group."""
@@ -91,6 +105,7 @@ class LevelBitplanes:
                                    #   b"Z" + zlib stream | b"R" + raw words
     plane_raw_bits: int            # uncompressed bits per plane (= count)
     signs: bytes                   # zlib(packbits(c < 0))
+    _crcs: Optional[Tuple[Tuple[int, ...], int]] = None
 
     def plane_nbytes(self, b: int) -> int:
         return len(self.planes[b])
@@ -104,6 +119,22 @@ class LevelBitplanes:
         if self.exponent is None:
             return 0
         return sum(len(p) for p in self.planes) + len(self.signs)
+
+    def meta(self) -> PlaneGroupMeta:
+        return PlaneGroupMeta(count=self.count, exponent=self.exponent,
+                              nbits=self.nbits,
+                              plane_sizes=tuple(len(p) for p in self.planes),
+                              sign_size=len(self.signs))
+
+    def segment_crcs(self) -> Tuple[Tuple[int, ...], int]:
+        """(per-plane crc32c, sign crc32c) — computed lazily so the encode
+        hot path pays nothing; the store manifest records these and the
+        fetcher re-verifies every segment it delivers."""
+        if self._crcs is None:
+            from repro.store.crc import crc32c
+            self._crcs = (tuple(crc32c(p) for p in self.planes),
+                          crc32c(self.signs))
+        return self._crcs
 
 
 def encode_level(coeffs: np.ndarray, nbits: int = DEFAULT_NBITS) -> LevelBitplanes:
@@ -127,39 +158,62 @@ def encode_level(coeffs: np.ndarray, nbits: int = DEFAULT_NBITS) -> LevelBitplan
                           plane_raw_bits=n, signs=signs)
 
 
+def accumulate_planes(count: int, nbits: int, blobs: Sequence[bytes],
+                      start: int,
+                      state: Optional[np.ndarray] = None) -> np.ndarray:
+    """OR encoded plane blobs (planes ``start .. start+len(blobs)``, MSB
+    numbering) into a uint64 magnitude state.  Blob-level entry point: the
+    planes may come from a `LevelBitplanes` or straight off a byte store —
+    the decode is identical, so any transport yields bit-identical
+    magnitudes.  All blobs are inflated and combined in ONE vectorized
+    unpack (ops.unpack_bitplanes) instead of a per-plane unpackbits loop."""
+    mag = state if state is not None else np.zeros(count, dtype=np.uint64)
+    if not blobs:
+        return mag
+    nwords = (count + 31) // 32
+    words = np.empty((len(blobs), nwords), dtype=np.uint32)
+    for i, blob in enumerate(blobs):
+        words[i] = _inflate_plane(blob, nwords)
+    shifts = np.asarray([nbits - 1 - b
+                         for b in range(start, start + len(blobs))],
+                        dtype=np.int64)
+    mag |= ops.unpack_bitplanes(words, shifts, count)
+    return mag
+
+
 def decode_magnitudes(lbp: LevelBitplanes, k: int,
                       state: Optional[np.ndarray] = None,
                       start: int = 0) -> np.ndarray:
     """Accumulate planes [start, k) into a uint64 magnitude state (incremental
-    recomposition — Definition 1(2)).  All newly fetched planes are inflated
-    and OR-combined in ONE vectorized unpack (ops.unpack_bitplanes) instead
-    of a per-plane unpackbits loop."""
+    recomposition — Definition 1(2))."""
     if lbp.exponent is None:
         return np.zeros(lbp.count, dtype=np.uint64)
-    mag = state if state is not None else np.zeros(lbp.count, dtype=np.uint64)
     k = min(k, lbp.nbits)
     if start >= k:
-        return mag
-    nwords = (lbp.count + 31) // 32
-    words = np.empty((k - start, nwords), dtype=np.uint32)
-    for i, b in enumerate(range(start, k)):
-        words[i] = _inflate_plane(lbp.planes[b], nwords)
-    shifts = np.asarray([lbp.nbits - 1 - b for b in range(start, k)],
-                        dtype=np.int64)
-    mag |= ops.unpack_bitplanes(words, shifts, lbp.count)
-    return mag
+        return state if state is not None \
+            else np.zeros(lbp.count, dtype=np.uint64)
+    return accumulate_planes(lbp.count, lbp.nbits, lbp.planes[start:k],
+                             start, state)
+
+
+def values_from_planes(count: int, exponent: Optional[int], nbits: int,
+                       mag: np.ndarray, signs_blob: bytes) -> np.ndarray:
+    """Magnitude state + encoded sign segment -> float64 coefficient values
+    (blob-level counterpart of ``decode_values``)."""
+    if exponent is None:
+        return np.zeros(count, dtype=np.float64)
+    signs = np.unpackbits(
+        np.frombuffer(zlib.decompress(signs_blob), dtype=np.uint8),
+        count=count).astype(bool)
+    vals = mag.astype(np.float64) * np.float64(2.0) ** (exponent - nbits)
+    vals[signs] *= -1.0
+    return vals
 
 
 def decode_values(lbp: LevelBitplanes, mag: np.ndarray) -> np.ndarray:
     """Magnitude state + signs -> float64 coefficient values."""
-    if lbp.exponent is None:
-        return np.zeros(lbp.count, dtype=np.float64)
-    signs = np.unpackbits(
-        np.frombuffer(zlib.decompress(lbp.signs), dtype=np.uint8),
-        count=lbp.count).astype(bool)
-    vals = mag.astype(np.float64) * np.float64(2.0) ** (lbp.exponent - lbp.nbits)
-    vals[signs] *= -1.0
-    return vals
+    return values_from_planes(lbp.count, lbp.exponent, lbp.nbits, mag,
+                              lbp.signs)
 
 
 def plane_bound(lbp: LevelBitplanes, k: int) -> float:

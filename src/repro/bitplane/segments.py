@@ -1,23 +1,33 @@
 """Progressive segment streams: incremental per-level plane retrieval state.
 
-A LevelStream owns the encoded planes of one coefficient group and tracks how
-many have been "moved" so far — retrieval cost is charged once per plane, and
-recomposition is incremental (newly arrived planes OR into the magnitude
-state), matching Definition 1's progressive-compressor contract.
+A LevelStream owns the *decode state* of one coefficient group and tracks how
+many planes have been "moved" so far — retrieval cost is charged once per
+plane, and recomposition is incremental (newly arrived planes OR into the
+magnitude state), matching Definition 1's progressive-compressor contract.
+
+The stream no longer holds the encoded planes themselves: it pulls them
+through a ``PlaneSource`` — either an in-memory `LevelBitplanes` wrapper or a
+store-backed source that fetches checksum-verified segments through a
+`SegmentFetcher` (repro.store).  ``prefetch_to_eps`` forwards a *hint* to the
+source: a store-backed source issues background fetches for the planes an
+upcoming request will need, so transport overlaps the QoI estimator round
+(the in-memory source ignores it).  Decoded results are bit-identical across
+sources and across any fetch schedule ending at the same plane counts.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
 from repro.bitplane.encoder import (
     LevelBitplanes,
-    decode_magnitudes,
-    decode_values,
+    PlaneGroupMeta,
+    accumulate_planes,
     plane_bound,
     planes_needed,
+    values_from_planes,
 )
 
 
@@ -28,45 +38,106 @@ class PlaneSegment:
     nbytes: int
 
 
-@dataclass
+class PlaneSource:
+    """Access to one coefficient group's encoded segments.
+
+    ``meta`` is always resident; payload bytes are produced on demand by
+    ``planes``/``signs``.  ``prefetch`` is a non-binding hint that the given
+    plane range (plus the sign segment, if plane 0 is included) will be
+    requested soon.
+    """
+
+    meta: PlaneGroupMeta
+
+    def planes(self, start: int, stop: int) -> Sequence[bytes]:
+        raise NotImplementedError
+
+    def signs(self) -> bytes:
+        raise NotImplementedError
+
+    def prefetch(self, start: int, stop: int, certain: bool = True) -> None:
+        """Hint that planes [start, stop) will be requested; ``certain=False``
+        marks a speculative prediction the reader may never follow up on."""
+        pass
+
+
+class InMemoryPlaneSource(PlaneSource):
+    """The classic path: planes live in a `LevelBitplanes` in RAM."""
+
+    def __init__(self, lbp: LevelBitplanes):
+        self.lbp = lbp
+        self.meta = lbp.meta()
+
+    def planes(self, start: int, stop: int) -> Sequence[bytes]:
+        return self.lbp.planes[start:stop]
+
+    def signs(self) -> bytes:
+        return self.lbp.signs
+
+
 class LevelStream:
-    lbp: LevelBitplanes
-    fetched: int = 0
-    bytes_fetched: int = 0
-    _mag: Optional[np.ndarray] = None
-    _values: Optional[np.ndarray] = None
+    """Progressive reader state over one group's PlaneSource."""
+
+    def __init__(self, source: Union[PlaneSource, LevelBitplanes]):
+        if isinstance(source, LevelBitplanes):
+            source = InMemoryPlaneSource(source)
+        self.source = source
+        self.meta = source.meta
+        self.fetched = 0
+        self.bytes_fetched = 0
+        self._mag: Optional[np.ndarray] = None
+        self._signs: Optional[bytes] = None
+        self._values: Optional[np.ndarray] = None
 
     def fetch_to_planes(self, k: int) -> int:
         """Retrieve planes up to k (MSB-first). Returns newly moved bytes."""
-        k = int(np.clip(k, 0, self.lbp.nbits))
-        if self.lbp.exponent is None or k <= self.fetched:
+        meta = self.meta
+        k = int(np.clip(k, 0, meta.nbits))
+        if meta.exponent is None or k <= self.fetched:
             return 0
-        new_bytes = sum(self.lbp.plane_nbytes(b) for b in range(self.fetched, k))
+        blobs = self.source.planes(self.fetched, k)
+        new_bytes = sum(meta.plane_sizes[self.fetched:k])
         if self.fetched == 0:
-            new_bytes += self.lbp.sign_nbytes  # signs ride with first plane
-        self._mag = decode_magnitudes(self.lbp, k, state=self._mag,
-                                      start=self.fetched)
+            self._signs = self.source.signs()  # signs ride with first plane
+            new_bytes += meta.sign_size
+        self._mag = accumulate_planes(meta.count, meta.nbits, blobs,
+                                      self.fetched, state=self._mag)
         self.fetched = k
         self.bytes_fetched += new_bytes
         self._values = None
         return new_bytes
 
     def fetch_to_eps(self, eps: float) -> int:
-        return self.fetch_to_planes(planes_needed(self.lbp, eps))
+        return self.fetch_to_planes(planes_needed(self.meta, eps))
+
+    def prefetch_to_eps(self, eps: float, certain: bool = True) -> None:
+        """Hint the source that a request at ``eps`` is coming; a store-backed
+        source starts moving planes [fetched, planes_needed) in the
+        background.  Never changes decode state or byte accounting."""
+        meta = self.meta
+        if meta.exponent is None:
+            return
+        k = planes_needed(meta, eps)
+        if k > self.fetched:
+            self.source.prefetch(self.fetched, k, certain=certain)
 
     def values(self) -> np.ndarray:
         if self._values is None:
-            mag = self._mag if self._mag is not None else np.zeros(
-                self.lbp.count, dtype=np.uint64)
-            self._values = decode_values(self.lbp, mag)
+            if self.fetched == 0:
+                self._values = np.zeros(self.meta.count, dtype=np.float64)
+            else:
+                self._values = values_from_planes(
+                    self.meta.count, self.meta.exponent, self.meta.nbits,
+                    self._mag, self._signs)
         return self._values
 
     @property
     def bound(self) -> float:
-        return plane_bound(self.lbp, self.fetched)
+        return plane_bound(self.meta, self.fetched)
 
     def reset(self) -> None:
         self.fetched = 0
         self.bytes_fetched = 0
         self._mag = None
+        self._signs = None
         self._values = None

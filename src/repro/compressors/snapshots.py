@@ -27,6 +27,15 @@ def default_snapshot_eps(value_range: float, n: int = 10,
     return [value_range * base ** (-(i + 1)) for i in range(n)]
 
 
+def select_snapshot(snapshots: Sequence, eps: float) -> int:
+    """Index of the coarsest snapshot with eps_i <= eps (the ladder is
+    sorted loosest-first); the tightest available if none reaches eps."""
+    for i, s in enumerate(snapshots):
+        if s.eps <= eps:
+            return i
+    return len(snapshots) - 1
+
+
 @dataclass
 class SnapshotArchive:
     """PSZ3: independent snapshots at decreasing error bounds."""
@@ -52,15 +61,17 @@ class SnapshotReader:
         self.bytes_fetched = 0
         self._cache: Optional[Tuple[int, np.ndarray]] = None
 
+    def _select(self, eps: float) -> int:
+        return select_snapshot(self.archive.snapshots, eps)
+
+    def _decode(self, idx: int) -> np.ndarray:
+        """Decode snapshot ``idx`` — overridden by store-backed readers that
+        must fetch the blobs (checksum-verified) before decompressing."""
+        return sz_decompress(self.archive.snapshots[idx])
+
     def request(self, eps: float) -> Tuple[np.ndarray, float]:
         snaps = self.archive.snapshots
-        idx = None
-        for i, s in enumerate(snaps):
-            if s.eps <= eps:
-                idx = i
-                break
-        if idx is None:
-            idx = len(snaps) - 1  # tightest available
+        idx = self._select(eps)
         # never go backwards: reuse an already-fetched tighter snapshot
         if self._cache is not None and self._cache[0] >= idx:
             idx = self._cache[0]
@@ -68,7 +79,7 @@ class SnapshotReader:
             self.bytes_fetched += snaps[idx].nbytes
             self.fetched[idx] = True
         if self._cache is None or self._cache[0] != idx:
-            self._cache = (idx, sz_decompress(snaps[idx]))
+            self._cache = (idx, self._decode(idx))
         return self._cache[1], snaps[idx].safe_eps
 
 
@@ -107,19 +118,19 @@ class DeltaSnapshotReader:
         self.bytes_fetched = 0
         self._decoded: Optional[np.ndarray] = None
 
+    def _select(self, eps: float) -> int:
+        return select_snapshot(self.archive.snapshots, eps)
+
+    def _decode(self, idx: int) -> np.ndarray:
+        return sz_decompress(self.archive.snapshots[idx])
+
     def request(self, eps: float) -> Tuple[np.ndarray, float]:
         snaps = self.archive.snapshots
-        idx = None
-        for i, s in enumerate(snaps):
-            if s.eps <= eps:
-                idx = i
-                break
-        if idx is None:
-            idx = len(snaps) - 1
+        idx = self._select(eps)
         while self.n_fetched <= idx:
             snap = snaps[self.n_fetched]
             self.bytes_fetched += snap.nbytes
-            delta = sz_decompress(snap)
+            delta = self._decode(self.n_fetched)
             self._decoded = delta if self._decoded is None \
                 else self._decoded + delta
             self.n_fetched += 1

@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.bitplane.encoder import LevelBitplanes, encode_level
-from repro.bitplane.segments import LevelStream
+from repro.bitplane.segments import InMemoryPlaneSource, LevelStream
 from repro.compressors.snapshots import (
     DeltaSnapshotArchive,
     SnapshotArchive,
@@ -80,6 +80,14 @@ class BitplaneVarArchive:
     def total_nbytes(self) -> int:
         return sum(g.total_nbytes for g in self.groups)
 
+    def plane_sources(self) -> List[InMemoryPlaneSource]:
+        """One PlaneSource per coefficient group — the uniform segment-access
+        surface shared with store-backed variables (repro.store)."""
+        return [InMemoryPlaneSource(g) for g in self.groups]
+
+    def open_reader(self) -> "_BitplaneVarReader":
+        return _BitplaneVarReader(self)
+
 
 @dataclass
 class SnapshotVarArchive:
@@ -88,6 +96,9 @@ class SnapshotVarArchive:
     @property
     def total_nbytes(self) -> int:
         return self.archive.total_nbytes
+
+    def open_reader(self) -> "_SnapshotVarReader":
+        return _SnapshotVarReader(self)
 
 
 @dataclass
@@ -169,9 +180,14 @@ def _build_bitplane_var(data: np.ndarray, method: str, nbits: int,
 
 
 class _BitplaneVarReader:
-    def __init__(self, var: BitplaneVarArchive):
+    """Progressive reader over a bitplane variable — in-memory
+    `BitplaneVarArchive` or store-backed `repro.store.StoreBitplaneVar`
+    (same surface: method/shapes/levels/groups/group_indices/plane_sources);
+    planes arrive through each group's PlaneSource."""
+
+    def __init__(self, var):
         self.var = var
-        self.streams = [LevelStream(g) for g in var.groups]
+        self.streams = [LevelStream(src) for src in var.plane_sources()]
         self._recon: Optional[np.ndarray] = None
         self._dirty = True
         # HB incremental recomposition state (see module docstring): one
@@ -251,6 +267,18 @@ class _BitplaneVarReader:
             self._refresh_full()
         return self._recon, self.achieved_bound()
 
+    def prefetch_eps(self, eps: float, certain: bool = True) -> None:
+        """Hint that a request at ``eps`` is coming: split the budget exactly
+        as ``request`` will and forward per-group plane ranges to the
+        sources.  Store-backed sources start background fetches; in-memory
+        sources ignore it.  No decode state or byte accounting changes.
+        ``certain=False`` (a speculative prediction) is byte-safe here —
+        plane fetches are monotone prefixes, so a too-shallow prediction is
+        always a subset of whatever is eventually consumed — but the flag is
+        forwarded so the fetcher knows which cache entries it may evict."""
+        for s, budget in zip(self.streams, self._budgets(eps)):
+            s.prefetch_to_eps(budget, certain=certain)
+
     def _refresh_hb_incremental(self) -> None:
         """HB linearity: recompute only the per-level contributions whose
         plane counts moved (partial recompose from that level down), then
@@ -304,24 +332,41 @@ class _SnapshotVarReader:
 
 
 class RetrievalSession:
-    """Progressive, stateful reader over all variables of an Archive."""
+    """Progressive, stateful reader over all variables of an Archive (the
+    in-memory `Archive` or a store-backed `repro.store.StoreArchive` — every
+    variable builds its own reader via ``open_reader``)."""
 
-    def __init__(self, archive: Archive):
+    def __init__(self, archive):
         self.archive = archive
         self.readers: Dict[str, object] = {}
         self._mask_charged: Dict[str, bool] = {}
         for name, var in archive.variables.items():
-            if isinstance(var, BitplaneVarArchive):
-                self.readers[name] = _BitplaneVarReader(var)
-            else:
-                self.readers[name] = _SnapshotVarReader(var)
+            self.readers[name] = var.open_reader()
             self._mask_charged[name] = False
         self._mask_bytes = 0
+        # How many reassign_eb reduction steps ahead the retrieval loop may
+        # hint to the fetcher (store sessions override via StoreArchive.open;
+        # depth 1 is always a prefix of the next round's fetch, so nothing
+        # speculative is ever wasted).
+        self.prefetch_depth = 1
 
     @property
     def bytes_retrieved(self) -> int:
         return sum(r.bytes_fetched for r in self.readers.values()) \
             + self._mask_bytes
+
+    def prefetch(self, name: str, eps: float, certain: bool = True) -> None:
+        """Non-binding hint that ``reconstruct(name, eps)`` is coming —
+        forwarded to readers that support background segment fetch
+        (store-backed bitplane and snapshot readers); a no-op otherwise.
+        ``certain=False`` marks a *predicted* eps the retrieval loop may
+        overshoot; readers whose fetch granularity is not prefix-monotone
+        (independent psz3 snapshots) skip those to avoid moving bytes that
+        are never consumed."""
+        reader = self.readers.get(name)
+        prefetch = getattr(reader, "prefetch_eps", None)
+        if prefetch is not None:
+            prefetch(eps, certain=certain)
 
     def reconstruct(self, name: str, eps: float) -> Tuple[np.ndarray, float]:
         """Reconstruct variable to L-inf bound <= eps; returns the data (with

@@ -107,6 +107,7 @@ def retrieve_qoi_controlled(session,
             raise KeyError(f"QoI references unknown variable {v!r}")
     eps = assign_eb(requests, ranges)
     floors = {v: MIN_REL_EPS * ranges[v] for v in needed}
+    prefetch = getattr(session, "prefetch", None)
     logs: List[IterationLog] = []
     values: Dict[str, np.ndarray] = {}
     eb_arrays: Dict[str, np.ndarray] = {}
@@ -114,7 +115,12 @@ def retrieve_qoi_controlled(session,
     converged = False
 
     for it in range(max_iters):
-        # -- progressive reconstruction at current bounds (lines 9-11)
+        # -- progressive reconstruction at current bounds (lines 9-11).
+        # Hint every variable's fetch up front: the store fetcher starts
+        # moving later variables' segments while earlier variables decode.
+        if prefetch is not None:
+            for v in needed:
+                prefetch(v, eps[v])
         for v in needed:
             data, ach = session.reconstruct(v, eps[v])
             values[v] = data
@@ -178,6 +184,20 @@ def retrieve_qoi_controlled(session,
                     cur = max(cur / reduction, floors[v])
                 lad[t] = cur
             ladders[v] = lad
+        # -- async segment prefetch: reassign always lands at ladder state
+        # t_star >= 1 (state 0 is the current, still-violating bound), so the
+        # planes for ladder[depth=1] are a guaranteed prefix of the next
+        # round's fetch.  Hand these predicted next-eps to the fetcher NOW so
+        # store-backed sessions move segments in the background while the
+        # batched ladder estimate below (and the next estimator round) run.
+        # Depths > 1 hide more latency but may speculate past t_star.
+        depth = int(np.clip(getattr(session, "prefetch_depth", 1),
+                            1, LADDER_STEPS))
+        if prefetch is not None:
+            for v in involved:
+                predicted = float(ladders[v][depth])
+                if predicted > 0.0:
+                    prefetch(v, min(eps[v], predicted), certain=False)
         _, pb = _estimate(
             req.expr,
             {v: np.full(LADDER_STEPS, pt_vals[v]) for v in involved},
@@ -198,6 +218,12 @@ def retrieve_qoi_controlled(session,
         pt_ebs = {v: float(ladders[v][t_star]) for v in involved}
         for v in involved:
             eps[v] = min(eps[v], pt_ebs[v]) if pt_ebs[v] > 0 else eps[v]
+        # -- the landing state is now exact: prefetch the full next-round
+        # plane set so transport overlaps the remaining bookkeeping and the
+        # per-variable decode/recompose of the next reconstruct pass.
+        if prefetch is not None:
+            for v in involved:
+                prefetch(v, eps[v])
         if at_floor:
             # full fidelity reached and still unbounded -> retrieve all and stop
             for v in involved:

@@ -56,6 +56,23 @@ def _parse_shape(s: str) -> Tuple[Optional[str], List[int]]:
     return dt, [int(d) for d in dims.split(",")] if dims else []
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an HLO operand list on top-level commas only — operands carry
+    inline shapes like ``f32[64,64]{1,0} %name``, so a naive split breaks
+    inside the brackets."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    out.append(s[start:])
+    return [o.strip() for o in out if o.strip()]
+
+
 def _shape_bytes(s: str) -> int:
     """bytes of a shape string; tuples sum their elements."""
     total = 0
@@ -196,14 +213,18 @@ def analyze_hlo(hlo: str) -> HloStats:
                 out_prod = 1
                 for d in out_dims:
                     out_prod *= d
-                # contracted size from the lhs operand's shape
+                # contracted size from the lhs operand's shape: modern HLO
+                # prints it inline (``dot(f32[64,64]{1,0} %lhs, ...)``);
+                # fall back to the defining instruction's shape otherwise
                 ops_m = operand_re.search(ins.line[ins.line.find("dot("):])
                 contract = 1
                 lm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
                 if ops_m and lm and lm.group(1):
-                    lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
-                    lhs_shape = name_shape.get(lhs_name, "")
-                    _, lhs_dims = _parse_shape(lhs_shape)
+                    lhs = _split_operands(ops_m.group(1))[0]
+                    _, lhs_dims = _parse_shape(lhs)
+                    if not lhs_dims:
+                        lhs_name = lhs.split()[-1].lstrip("%")
+                        _, lhs_dims = _parse_shape(name_shape.get(lhs_name, ""))
                     for idx in lm.group(1).split(","):
                         i = int(idx)
                         if i < len(lhs_dims):

@@ -9,24 +9,40 @@ Hardware model (roofline constants for TPU v5e): 197 TFLOP/s bf16/chip,
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence, Tuple
+
 import jax
-from jax.sharding import AxisType
 
 # v5e roofline constants (per chip)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s
 ICI_BW = 50e9                   # B/s per link
 
+# jax >= 0.5 moved explicit/auto axis semantics into make_mesh(axis_types=);
+# on 0.4.x the kwarg (and jax.sharding.AxisType) does not exist and every
+# axis is implicitly Auto — which is the only type this codebase uses.
+_AXIS_TYPE_AUTO = getattr(jax.sharding, "AxisType", None)
+_AXIS_TYPE_AUTO = getattr(_AXIS_TYPE_AUTO, "Auto", None)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """Version-portable ``jax.make_mesh`` with all axes of type Auto."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _AXIS_TYPE_AUTO is not None:
+        kwargs["axis_types"] = (_AXIS_TYPE_AUTO,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    shape: Tuple[int, ...] = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int, model_parallel: int = 1):
     """Small-mesh helper for tests/examples on real local devices."""
     data = n_devices // model_parallel
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model_parallel), ("data", "model"))

@@ -1,6 +1,7 @@
 """Batched progressive-retrieval service — the paper's serving shape.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 16
+    PYTHONPATH=src python -m repro.launch.serve --store /data/ge.prs
 
 Simulates the production deployment of Fig 1: data is refactored once into
 progressive archives ("storage"); a stream of analysis requests arrives,
@@ -8,13 +9,20 @@ each naming QoIs + tolerances; the server runs Algorithm 2 per session and
 answers with guaranteed-error reconstructions. Sessions are sticky, so a
 client tightening its tolerance pays only for the new segments (the
 incremental-recomposition contract).
+
+With ``--store PATH`` the server serves from an on-disk archive container
+(repro.store): if PATH is missing it refactors once and saves it, then — in
+either case — reopens the container and streams checksum-verified segments
+through the SegmentFetcher (mmap'd range reads + async prefetch) instead of
+holding the refactored archive in RAM.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -22,6 +30,7 @@ from repro.core import ge
 from repro.core.refactor import refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
+from repro.store import open_archive, save_archive
 
 
 @dataclass
@@ -32,9 +41,24 @@ class Request:
 
 
 class RetrievalServer:
-    def __init__(self, fields, method: str = "hb"):
+    def __init__(self, fields, method: str = "hb",
+                 store_path: Optional[str] = None):
         t0 = time.time()
-        self.archive = refactor_variables(fields, method=method)
+        if store_path is not None:
+            if not os.path.exists(store_path):
+                save_archive(refactor_variables(fields, method=method),
+                             store_path)
+            self.archive = open_archive(store_path)
+            shapes = {k: np.asarray(v).shape for k, v in fields.items()}
+            if self.archive.method != method or self.archive.shapes != shapes:
+                raise SystemExit(
+                    f"store {store_path} holds method="
+                    f"{self.archive.method!r} shapes="
+                    f"{dict(self.archive.shapes)} but the server was asked "
+                    f"for method={method!r} shapes={shapes} — delete the "
+                    f"file to re-refactor, or match the flags")
+        else:
+            self.archive = refactor_variables(fields, method=method)
         self.sessions: Dict[str, object] = {}
         self.refactor_s = time.time() - t0
         self.qois = ge.all_qois()
@@ -59,11 +83,16 @@ def main(argv=None) -> int:
     ap.add_argument("--n", type=int, default=1 << 15)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--method", default="hb")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="serve from an archive container at PATH "
+                         "(refactor+save first if it does not exist)")
     args = ap.parse_args(argv)
 
     fields = ge_like_fields(n=args.n, seed=0)
-    server = RetrievalServer(fields, method=args.method)
-    print(f"[server] refactored {args.n} pts x5 vars in "
+    server = RetrievalServer(fields, method=args.method,
+                             store_path=args.store)
+    src = f"store {args.store}" if args.store else "in-memory archive"
+    print(f"[server] {src} ready for {args.n} pts x5 vars in "
           f"{server.refactor_s:.2f}s "
           f"(archive {server.archive.total_nbytes / 2**20:.2f} MiB)")
 
@@ -85,6 +114,13 @@ def main(argv=None) -> int:
     raw = sum(v.nbytes for v in fields.values())
     print(f"[server] total moved {total_bytes / 2**20:.2f} MiB vs raw "
           f"{raw / 2**20:.2f} MiB ({total_bytes / raw:.0%})")
+    if args.store:
+        st = server.archive.fetcher.stats
+        print(f"[server] store: {st.bytes_fetched} segment bytes fetched, "
+              f"{st.demand_fetches} demand / {st.pipelined_hits} pipelined / "
+              f"{st.prefetch_hits} predicted (hit rate {st.hit_rate:.0%}), "
+              f"blocked {st.demand_wait_s * 1e3:.1f}ms")
+        server.archive.close()
     return 0
 
 

@@ -1,0 +1,39 @@
+"""Segment store & transport: archive container, byte stores, prefetching.
+
+The paper's headline is a data-*transfer* win; this package is the layer
+that actually moves bytes.  ``save_archive`` serializes a refactored
+`Archive` (any of the four methods) into a manifest + segment blob
+container; ``open_archive`` serves it back through pluggable ByteStore
+backends (RAM, mmap'd file, simulated WAN link) with per-segment crc32c
+verification and a SegmentFetcher that prefetches predicted planes in the
+background while the QoI estimator runs.
+"""
+from repro.store.bytestore import (
+    ByteStore,
+    FileByteStore,
+    MemoryByteStore,
+    RemoteByteStore,
+)
+from repro.store.container import (
+    StoreArchive,
+    StoreBitplaneVar,
+    StoreSnapshotVar,
+    build_container,
+    memory_store_archive,
+    open_archive,
+    save_archive,
+)
+from repro.store.crc import crc32c
+from repro.store.fetcher import (
+    ChecksumError,
+    FetchStats,
+    SegmentEntry,
+    SegmentFetcher,
+)
+
+__all__ = [
+    "ByteStore", "MemoryByteStore", "FileByteStore", "RemoteByteStore",
+    "StoreArchive", "StoreBitplaneVar", "StoreSnapshotVar",
+    "build_container", "save_archive", "open_archive", "memory_store_archive",
+    "crc32c", "SegmentFetcher", "SegmentEntry", "FetchStats", "ChecksumError",
+]

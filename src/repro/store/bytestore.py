@@ -1,0 +1,136 @@
+"""Pluggable byte stores: where an archive container's bytes physically live.
+
+One interface — ``read(offset, length)`` over a flat address space — with
+three backends:
+
+  * MemoryByteStore   bytes in RAM (tests, and the write target of
+                      ``save_archive`` before flushing to disk);
+  * FileByteStore     a local file, mmap'd so range reads are zero-copy page
+                      faults instead of seek+read syscalls;
+  * RemoteByteStore   wraps another store behind a modelled network link
+                      (per-request latency + bandwidth, single shared link),
+                      so benchmarks measure real end-to-end *time*, not just
+                      byte counts — and so prefetch has actual latency to
+                      hide.
+
+All backends are thread-safe: the SegmentFetcher issues background reads
+from its prefetch executor while the caller decodes on the main thread.
+"""
+from __future__ import annotations
+
+import mmap
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class ByteStore:
+    """Range-readable byte container."""
+
+    def read(self, offset: int, length: int) -> bytes:
+        raise NotImplementedError
+
+    @property
+    def size(self) -> int:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self) -> "ByteStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class MemoryByteStore(ByteStore):
+    def __init__(self, data: bytes):
+        self._data = data
+
+    def read(self, offset: int, length: int) -> bytes:
+        if offset < 0 or offset + length > len(self._data):
+            raise EOFError(f"read [{offset}, {offset + length}) outside "
+                           f"store of {len(self._data)} bytes")
+        return bytes(self._data[offset:offset + length])
+
+    @property
+    def size(self) -> int:
+        return len(self._data)
+
+
+class FileByteStore(ByteStore):
+    """mmap-backed local file store (read-only)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = open(path, "rb")
+        self._size = os.fstat(self._fh.fileno()).st_size
+        self._mm = mmap.mmap(self._fh.fileno(), 0, access=mmap.ACCESS_READ) \
+            if self._size else None
+
+    def read(self, offset: int, length: int) -> bytes:
+        if offset < 0 or offset + length > self._size:
+            raise EOFError(f"read [{offset}, {offset + length}) outside "
+                           f"{self.path} of {self._size} bytes")
+        return self._mm[offset:offset + length]
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def close(self) -> None:
+        if self._mm is not None:
+            self._mm.close()
+            self._mm = None
+        self._fh.close()
+
+
+@dataclass
+class LinkStats:
+    """Accounting for a simulated network link."""
+    requests: int = 0
+    bytes_moved: int = 0
+    busy_s: float = 0.0        # time the link spent transferring
+
+
+class RemoteByteStore(ByteStore):
+    """A store on the far side of a modelled network link.
+
+    Every read pays ``latency_s`` of request round-trip (propagation —
+    concurrent requests overlap it, like pipelined HTTP range reads) plus
+    ``length / bandwidth_bps`` of wire time serialized FIFO over one shared
+    link (a lock — bandwidth is not multiplied by issuing requests in
+    parallel).  The delay is *real wall time* (``time.sleep``), so overlap
+    with compute on other threads is physically measured, not estimated.
+    """
+
+    def __init__(self, inner: ByteStore, latency_s: float = 1e-3,
+                 bandwidth_bps: float = 400e6):
+        self.inner = inner
+        self.latency_s = float(latency_s)
+        self.bandwidth_bps = float(bandwidth_bps)
+        self.stats = LinkStats()
+        self._link = threading.Lock()
+
+    def transfer_time(self, length: int) -> float:
+        return self.latency_s + length / self.bandwidth_bps
+
+    def read(self, offset: int, length: int) -> bytes:
+        time.sleep(self.latency_s)       # round-trip; overlaps across threads
+        wire = length / self.bandwidth_bps
+        with self._link:                 # one transfer on the wire at a time
+            time.sleep(wire)
+            self.stats.requests += 1
+            self.stats.bytes_moved += length
+            self.stats.busy_s += self.latency_s + wire
+        return self.inner.read(offset, length)
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def close(self) -> None:
+        self.inner.close()

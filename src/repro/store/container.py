@@ -1,0 +1,459 @@
+"""On-disk archive container: manifest + concatenated segment blob.
+
+Layout of a ``.prs`` container::
+
+    magic  b"PRSTORE1"                          (8 bytes)
+    manifest length, uint64 little-endian       (8 bytes)
+    manifest JSON (utf-8)
+    payload: concatenated segments
+
+The manifest carries everything *about* the archive — method, per-variable
+group metadata (counts, exponents, nbits, per-plane sizes), snapshot ladder
+metadata, outlier-mask shapes, value ranges — plus a segment index mapping
+``key -> (offset, size, crc32c)`` into the payload.  The payload carries
+only opaque segment bytes: one segment per bitplane, per sign plane, per
+snapshot blob, per mask bitmap / mask value array.  Offsets are relative to
+the payload start, so the payload can be re-hosted on any ByteStore (file,
+memory, behind a simulated WAN) without rewriting the manifest.
+
+``save_archive`` serializes any `core.refactor.Archive` (all four methods);
+``open_archive`` yields a `StoreArchive` whose ``open()`` returns a regular
+`RetrievalSession` — readers stream checksum-verified segments through a
+`SegmentFetcher` instead of holding the encoded bytes, and reconstruction is
+bit-identical to an in-memory session at every requested bound.
+
+JSON is a deliberate choice for the manifest: Python's float repr
+round-trips IEEE-754 doubles exactly, so eps ladders / ranges / amax survive
+save->open bit-identically.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.bitplane.encoder import LevelBitplanes, PlaneGroupMeta
+from repro.bitplane.segments import PlaneSource
+from repro.compressors.snapshots import (
+    DeltaSnapshotArchive,
+    DeltaSnapshotReader,
+    SnapshotArchive,
+    SnapshotReader,
+)
+from repro.compressors.szlike import SZCompressed, sz_decompress
+from repro.core.masks import OutlierMask
+from repro.core.refactor import (
+    Archive,
+    BitplaneVarArchive,
+    RetrievalSession,
+    SnapshotVarArchive,
+    _BitplaneVarReader,
+)
+from repro.store.bytestore import ByteStore, FileByteStore, MemoryByteStore
+from repro.store.crc import crc32c
+from repro.store.fetcher import SegmentEntry, SegmentFetcher
+from repro.transform.hierarchical import level_map
+
+MAGIC = b"PRSTORE1"
+FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+
+class _SegmentWriter:
+    def __init__(self):
+        self.index: Dict[str, List[int]] = {}
+        self.chunks: List[bytes] = []
+        self.offset = 0
+
+    def add(self, key: str, data: bytes, crc: Optional[int] = None) -> None:
+        if key in self.index:
+            raise ValueError(f"duplicate segment key {key!r}")
+        self.index[key] = [self.offset, len(data),
+                           crc32c(data) if crc is None else crc]
+        self.chunks.append(data)
+        self.offset += len(data)
+
+    def payload(self) -> bytes:
+        return b"".join(self.chunks)
+
+
+def _bitplane_var_manifest(name: str, var: BitplaneVarArchive,
+                           w: _SegmentWriter) -> dict:
+    groups = []
+    for l, g in enumerate(var.groups):
+        plane_crcs, sign_crc = g.segment_crcs()
+        for b, blob in enumerate(g.planes):
+            w.add(f"{name}/g{l}/p{b}", blob, crc=plane_crcs[b])
+        if g.exponent is not None:
+            w.add(f"{name}/g{l}/signs", g.signs, crc=sign_crc)
+        groups.append({"count": g.count, "exponent": g.exponent,
+                       "nbits": g.nbits,
+                       "plane_sizes": [len(p) for p in g.planes],
+                       "sign_size": len(g.signs)})
+    return {"kind": "bitplane", "method": var.method,
+            "orig_shape": list(var.orig_shape),
+            "padded_shape": list(var.padded_shape),
+            "levels": var.levels, "groups": groups}
+
+
+def _snapshot_var_manifest(name: str, var: SnapshotVarArchive,
+                           w: _SegmentWriter) -> dict:
+    arch = var.archive
+    delta = isinstance(arch, DeltaSnapshotArchive)
+    snaps = []
+    for i, s in enumerate(arch.snapshots):
+        for j, blob in enumerate(s.blobs):
+            w.add(f"{name}/s{i}/b{j}", blob)
+        snaps.append({"eps": s.eps, "orig_shape": list(s.orig_shape),
+                      "padded_shape": list(s.padded_shape),
+                      "levels": s.levels, "dtypes": list(s.dtypes),
+                      "amax": s.amax,
+                      "blob_sizes": [len(b) for b in s.blobs]})
+    out = {"kind": "snapshot", "delta": delta, "snapshots": snaps}
+    if delta:
+        out["eps_ladder"] = list(arch.eps_ladder)
+    return out
+
+
+def build_container(archive: Archive) -> Tuple[dict, bytes]:
+    """Archive -> (manifest dict, payload bytes)."""
+    w = _SegmentWriter()
+    variables: Dict[str, dict] = {}
+    for name, var in archive.variables.items():
+        if "/" in name:
+            raise ValueError(f"variable name {name!r} may not contain '/'")
+        if isinstance(var, BitplaneVarArchive):
+            variables[name] = _bitplane_var_manifest(name, var, w)
+        elif isinstance(var, SnapshotVarArchive):
+            variables[name] = _snapshot_var_manifest(name, var, w)
+        else:
+            raise TypeError(f"cannot serialize variable of type {type(var)}")
+    masks: Dict[str, dict] = {}
+    for name, m in archive.masks.items():
+        w.add(f"{name}/mask/bitmap", np.packbits(m.mask.ravel()).tobytes())
+        w.add(f"{name}/mask/values",
+              np.ascontiguousarray(m.values, dtype=np.float64).tobytes())
+        masks[name] = {"shape": list(m.mask.shape),
+                       "n_true": int(m.mask.sum())}
+    manifest = {
+        "format": "prstore", "version": FORMAT_VERSION,
+        "method": archive.method,
+        "ranges": dict(archive.ranges),
+        "shapes": {k: list(v) for k, v in archive.shapes.items()},
+        "masks": masks,
+        "variables": variables,
+        "segments": w.index,
+    }
+    return manifest, w.payload()
+
+
+def save_archive(archive: Archive, path: str) -> int:
+    """Serialize ``archive`` into a container file; returns bytes written."""
+    manifest, payload = build_container(archive)
+    blob = json.dumps(manifest, sort_keys=True).encode("utf-8")
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<Q", len(blob)))
+        fh.write(blob)
+        fh.write(payload)
+    return len(MAGIC) + 8 + len(blob) + len(payload)
+
+
+# ---------------------------------------------------------------------------
+# Store-backed variables (mirror the in-memory archive interfaces)
+# ---------------------------------------------------------------------------
+
+
+class FetcherPlaneSource(PlaneSource):
+    """PlaneSource streaming one group's segments through a SegmentFetcher."""
+
+    def __init__(self, fetcher: SegmentFetcher, prefix: str,
+                 meta: PlaneGroupMeta):
+        self.fetcher = fetcher
+        self.prefix = prefix
+        self.meta = meta
+
+    def planes(self, start: int, stop: int) -> Sequence[bytes]:
+        return self.fetcher.fetch_many(
+            f"{self.prefix}/p{b}" for b in range(start, stop))
+
+    def signs(self) -> bytes:
+        return self.fetcher.fetch(f"{self.prefix}/signs")
+
+    def prefetch(self, start: int, stop: int, certain: bool = True) -> None:
+        keys = [f"{self.prefix}/p{b}" for b in range(start, stop)]
+        if start == 0:               # signs ride with the first plane
+            keys.append(f"{self.prefix}/signs")
+        self.fetcher.prefetch(keys, certain=certain)
+
+
+class StoreBitplaneVar:
+    """Store-backed PMGARD variable: same reader-facing surface as
+    `BitplaneVarArchive` (method/shapes/levels/groups/group_indices/
+    plane_sources), with plane payloads left on the ByteStore."""
+
+    def __init__(self, name: str, spec: dict, fetcher: SegmentFetcher):
+        self.name = name
+        self.method: str = spec["method"]
+        self.orig_shape = tuple(spec["orig_shape"])
+        self.padded_shape = tuple(spec["padded_shape"])
+        self.levels: int = spec["levels"]
+        self.groups: List[PlaneGroupMeta] = [
+            PlaneGroupMeta(count=g["count"], exponent=g["exponent"],
+                           nbits=g["nbits"],
+                           plane_sizes=tuple(g["plane_sizes"]),
+                           sign_size=g["sign_size"])
+            for g in spec["groups"]]
+        self._fetcher = fetcher
+        self._indices: Optional[List[np.ndarray]] = None
+
+    @property
+    def group_indices(self) -> List[np.ndarray]:
+        # Deterministic function of (padded_shape, levels) — recomputed
+        # instead of stored, exactly as the refactor computed it.
+        if self._indices is None:
+            lmap = level_map(self.padded_shape, self.levels).ravel()
+            self._indices = [np.flatnonzero(lmap == l)
+                             for l in range(self.levels + 1)]
+        return self._indices
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(sum(g.plane_sizes) + g.sign_size for g in self.groups)
+
+    def plane_sources(self) -> List[PlaneSource]:
+        return [FetcherPlaneSource(self._fetcher, f"{self.name}/g{l}", meta)
+                for l, meta in enumerate(self.groups)]
+
+    def open_reader(self) -> _BitplaneVarReader:
+        return _BitplaneVarReader(self)
+
+
+class _SnapshotHandle:
+    """Manifest-only view of one SZ snapshot: selection metadata resident,
+    blobs fetched (verified) on load."""
+
+    def __init__(self, name: str, idx: int, spec: dict,
+                 fetcher: SegmentFetcher):
+        self.eps: float = spec["eps"]
+        self.amax: float = spec["amax"]
+        self._spec = spec
+        self._keys = [f"{name}/s{idx}/b{j}"
+                      for j in range(len(spec["blob_sizes"]))]
+        self._fetcher = fetcher
+        self._loaded: Optional[SZCompressed] = None
+
+    @property
+    def nbytes(self) -> int:
+        return sum(self._spec["blob_sizes"]) + 64  # + header, as SZCompressed
+
+    @property
+    def safe_eps(self) -> float:
+        return self.eps + 8 * np.finfo(np.float64).eps * self.amax
+
+    def prefetch(self, certain: bool = True) -> None:
+        self._fetcher.prefetch(self._keys, certain=certain)
+
+    def load(self) -> SZCompressed:
+        if self._loaded is None:
+            blobs = self._fetcher.fetch_many(self._keys)
+            s = self._spec
+            self._loaded = SZCompressed(
+                eps=s["eps"], orig_shape=tuple(s["orig_shape"]),
+                padded_shape=tuple(s["padded_shape"]), levels=s["levels"],
+                blobs=blobs, dtypes=list(s["dtypes"]), amax=s["amax"])
+        return self._loaded
+
+
+class _StoreSnapshotReader(SnapshotReader):
+    def _decode(self, idx: int) -> np.ndarray:
+        return sz_decompress(self.archive.snapshots[idx].load())
+
+    def prefetch_eps(self, eps: float, certain: bool = True) -> None:
+        # Independent snapshots are NOT prefix-monotone: a *predicted* eps
+        # that undershoots the landing state would move a whole snapshot
+        # that is never decoded.  Only act on certain hints.
+        if not certain:
+            return
+        idx = self._select(eps)
+        # mirror request()'s never-go-backwards rule: a request at or below
+        # an already-decoded snapshot reuses it and decodes nothing new
+        if self._cache is not None and self._cache[0] >= idx:
+            return
+        if not self.fetched[idx]:
+            self.archive.snapshots[idx].prefetch()
+
+
+class _StoreDeltaSnapshotReader(DeltaSnapshotReader):
+    def _decode(self, idx: int) -> np.ndarray:
+        return sz_decompress(self.archive.snapshots[idx].load())
+
+    def prefetch_eps(self, eps: float, certain: bool = True) -> None:
+        # The residual ladder is cumulative (request(eps) consumes ALL
+        # snapshots up to the selected index), so even a speculative
+        # prediction prefetches a prefix of what any tighter landing state
+        # will consume — byte-safe either way.
+        idx = self._select(eps)
+        for i in range(self.n_fetched, idx + 1):
+            self.archive.snapshots[i].prefetch(certain=certain)
+
+
+class StoreSnapshotVar:
+    """Store-backed PSZ3 / PSZ3-delta variable."""
+
+    def __init__(self, name: str, spec: dict, fetcher: SegmentFetcher):
+        self.name = name
+        self.delta: bool = spec["delta"]
+        self.snapshots = [_SnapshotHandle(name, i, s, fetcher)
+                          for i, s in enumerate(spec["snapshots"])]
+        self.eps_ladder = list(spec.get("eps_ladder", []))
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(h.nbytes for h in self.snapshots)
+
+    def open_reader(self):
+        cls = _StoreDeltaSnapshotReader if self.delta else _StoreSnapshotReader
+        return cls(self)
+
+
+# ---------------------------------------------------------------------------
+# StoreArchive
+# ---------------------------------------------------------------------------
+
+
+class _LazyMasks:
+    """Mapping-like mask access that fetches (and verifies) mask segments on
+    first use — a session that never touches a variable never moves its
+    mask."""
+
+    def __init__(self, specs: Dict[str, dict], fetcher: SegmentFetcher):
+        self._specs = specs
+        self._fetcher = fetcher
+        self._cache: Dict[str, OutlierMask] = {}
+
+    def get(self, name: str) -> Optional[OutlierMask]:
+        if name not in self._specs:
+            return None
+        if name not in self._cache:
+            spec = self._specs[name]
+            shape = tuple(spec["shape"])
+            bitmap = self._fetcher.fetch(f"{name}/mask/bitmap")
+            mask = np.unpackbits(
+                np.frombuffer(bitmap, dtype=np.uint8),
+                count=int(np.prod(shape))).astype(bool).reshape(shape)
+            values = np.frombuffer(self._fetcher.fetch(f"{name}/mask/values"),
+                                   dtype=np.float64, count=spec["n_true"])
+            self._cache[name] = OutlierMask(mask=mask, values=values)
+        return self._cache[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    def __getitem__(self, name: str) -> OutlierMask:
+        m = self.get(name)
+        if m is None:
+            raise KeyError(name)
+        return m
+
+    def keys(self):
+        return self._specs.keys()
+
+    def values(self):
+        return [self[k] for k in self._specs]
+
+
+class StoreArchive:
+    """An archive whose segments live on a ByteStore; ``open()`` returns a
+    regular RetrievalSession streaming through the SegmentFetcher."""
+
+    def __init__(self, manifest: dict, store: ByteStore,
+                 payload_offset: int = 0, prefetch_workers: int = 2,
+                 verify: bool = True):
+        if manifest.get("format") != "prstore":
+            raise ValueError("not a prstore manifest")
+        if manifest.get("version", 0) > FORMAT_VERSION:
+            raise ValueError(f"container version {manifest.get('version')} "
+                             f"newer than supported {FORMAT_VERSION}")
+        self.manifest = manifest
+        self.store = store
+        self.method: str = manifest["method"]
+        self.ranges: Dict[str, float] = dict(manifest["ranges"])
+        self.shapes: Dict[str, Tuple[int, ...]] = {
+            k: tuple(v) for k, v in manifest["shapes"].items()}
+        index = {k: SegmentEntry(offset=payload_offset + off, size=size,
+                                 crc=crc)
+                 for k, (off, size, crc) in manifest["segments"].items()}
+        self.fetcher = SegmentFetcher(index, store,
+                                      prefetch_workers=prefetch_workers,
+                                      verify=verify)
+        self.masks = _LazyMasks(manifest["masks"], self.fetcher)
+        self.variables: Dict[str, object] = {}
+        for name, spec in manifest["variables"].items():
+            if spec["kind"] == "bitplane":
+                self.variables[name] = StoreBitplaneVar(name, spec,
+                                                        self.fetcher)
+            else:
+                self.variables[name] = StoreSnapshotVar(name, spec,
+                                                        self.fetcher)
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(size for _, size, _ in
+                   self.manifest["segments"].values())
+
+    def n_elements(self, name: str) -> int:
+        return int(np.prod(self.shapes[name]))
+
+    def open(self, prefetch_depth: int = 1) -> RetrievalSession:
+        session = RetrievalSession(self)
+        session.prefetch_depth = prefetch_depth
+        return session
+
+    def close(self) -> None:
+        self.fetcher.close()
+        self.store.close()
+
+    def __enter__(self) -> "StoreArchive":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def open_archive(source, prefetch_workers: int = 2,
+                 verify: bool = True) -> StoreArchive:
+    """Open a container from a path or an already-constructed ByteStore.
+
+    With a path, the manifest is parsed from the file head and segment reads
+    go through a mmap'd FileByteStore.  With a ByteStore (e.g. a
+    RemoteByteStore wrapping one), the container header is read *through*
+    the store, so header/manifest transfer is accounted like any other read.
+    """
+    store = FileByteStore(source) if isinstance(source, str) else source
+    head = store.read(0, len(MAGIC) + 8)
+    if head[:len(MAGIC)] != MAGIC:
+        store.close()
+        raise ValueError("bad magic: not a PRSTORE container")
+    (mlen,) = struct.unpack("<Q", head[len(MAGIC):])
+    manifest = json.loads(store.read(len(MAGIC) + 8, mlen).decode("utf-8"))
+    return StoreArchive(manifest, store,
+                        payload_offset=len(MAGIC) + 8 + mlen,
+                        prefetch_workers=prefetch_workers, verify=verify)
+
+
+def memory_store_archive(archive: Archive, prefetch_workers: int = 2,
+                         verify: bool = True) -> StoreArchive:
+    """Round an in-memory Archive through the container format without
+    touching disk (tests, benchmarks)."""
+    manifest, payload = build_container(archive)
+    manifest = json.loads(json.dumps(manifest))   # exact same path as disk
+    return StoreArchive(manifest, MemoryByteStore(payload),
+                        prefetch_workers=prefetch_workers, verify=verify)

@@ -1,0 +1,194 @@
+"""SegmentFetcher: checksum-verified segment delivery with async prefetch.
+
+The fetcher sits between progressive readers and a ByteStore.  Demand
+``fetch(key)`` blocks; ``prefetch(keys)`` submits background reads to a small
+thread pool so transport overlaps compute (the QoI estimator round of
+Algorithm 2 — see core/retrieval.py, which hands ``reassign_eb``'s predicted
+next-eps down here via the readers' prefetch hints).
+
+Every delivered segment is re-hashed (crc32c) against the manifest before the
+decoder sees it; a mismatch raises ChecksumError — a "guaranteed error bound"
+computed from silently corrupted planes would be worthless.
+
+Cache discipline: segments are consumed at most once per session (plane
+fetches are a monotone prefix per group), so a completed future is *popped*
+on fetch — the cache holds only in-flight or not-yet-consumed prefetches.
+Speculative hints the caller never follows up on would otherwise pin their
+payloads until close, so ``prefetch`` evicts the oldest completed
+*speculative* entries beyond ``max_inflight``.  Non-speculative entries
+(exact predictions and fetch_many pipelining) are never evicted — every
+internal caller consumes them within a round, and evicting one would force
+a duplicate transfer, breaking the equal-bytes-moved property the transfer
+benches assert.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.store.bytestore import ByteStore
+from repro.store.crc import crc32c
+
+
+class ChecksumError(IOError):
+    """A fetched segment failed crc32c verification."""
+
+
+@dataclass(frozen=True)
+class SegmentEntry:
+    """Manifest index entry: where a segment lives and what it must hash to."""
+    offset: int
+    size: int
+    crc: int
+
+
+@dataclass
+class FetchStats:
+    demand_fetches: int = 0        # blocking reads served straight from store
+    pipelined_hits: int = 0        # served by fetch_many's own pipelining
+    prefetch_issued: int = 0       # *speculative* background reads submitted
+    prefetch_hits: int = 0         # demand fetches answered by a prediction
+    bytes_fetched: int = 0         # all segment bytes pulled from the store
+    demand_wait_s: float = 0.0     # time the caller spent blocked on reads
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of consumed segments that a *predictive* prefetch had
+        already started (fetch_many's pipelining of demanded keys does not
+        count — that is latency hiding, not prediction)."""
+        served = self.demand_fetches + self.pipelined_hits + self.prefetch_hits
+        return self.prefetch_hits / served if served else 0.0
+
+
+class SegmentFetcher:
+    """Keyed, verified access to one archive's segments."""
+
+    def __init__(self, index: Dict[str, SegmentEntry], store: ByteStore,
+                 prefetch_workers: int = 2, verify: bool = True,
+                 max_inflight: int = 512):
+        self.index = index
+        self.store = store
+        self.verify = verify
+        self.max_inflight = max_inflight
+        self.stats = FetchStats()
+        self._lock = threading.Lock()
+        # key -> (future, from_hint, evictable): from_hint buckets the stats
+        # (prediction vs fetch_many pipelining); evictable marks entries a
+        # caller may never consume (speculative predictions)
+        self._inflight: Dict[str, Tuple[Future, bool, bool]] = {}
+        self._pool: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(max_workers=prefetch_workers,
+                               thread_name_prefix="seg-prefetch")
+            if prefetch_workers > 0 else None)
+
+    # -- transport -----------------------------------------------------------
+
+    def _read_verified(self, key: str) -> bytes:
+        entry = self.index[key]
+        buf = self.store.read(entry.offset, entry.size)
+        if self.verify and crc32c(buf) != entry.crc:
+            raise ChecksumError(
+                f"segment {key!r}: crc32c mismatch "
+                f"(got {crc32c(buf):#010x}, manifest {entry.crc:#010x})")
+        with self._lock:
+            self.stats.bytes_fetched += entry.size
+        return buf
+
+    # -- public API ----------------------------------------------------------
+
+    def fetch(self, key: str) -> bytes:
+        """Blocking, verified read of one segment (prefetch-aware)."""
+        with self._lock:
+            entry = self._inflight.pop(key, None)
+        t0 = time.perf_counter()
+        if entry is not None:
+            fut, from_hint, _ = entry
+            buf = fut.result()       # raises ChecksumError from the worker
+            with self._lock:
+                if from_hint:
+                    self.stats.prefetch_hits += 1
+                else:
+                    self.stats.pipelined_hits += 1
+        else:
+            buf = self._read_verified(key)
+            with self._lock:
+                self.stats.demand_fetches += 1
+        with self._lock:
+            self.stats.demand_wait_s += time.perf_counter() - t0
+        return buf
+
+    def fetch_many(self, keys: Iterable[str]) -> List[bytes]:
+        """Fetch a known list of segments.  With a worker pool the tail keys
+        are submitted up front, so per-request latency pipelines instead of
+        accumulating serially — these are demanded (not speculative) keys,
+        so nothing extra ever moves."""
+        keys = list(keys)
+        if self._pool is not None and len(keys) > 1:
+            self._submit(keys, from_hint=False, evictable=False)
+        return [self.fetch(k) for k in keys]
+
+    def prefetch(self, keys: Iterable[str], certain: bool = True) -> None:
+        """Start background fetches for hinted keys; no-op without a worker
+        pool.  Keys already in flight (or unknown) are skipped.
+        ``certain=False`` marks predictions the caller may abandon — those
+        entries are eviction-eligible once completed."""
+        self._submit(keys, from_hint=True, evictable=not certain)
+
+    def _submit(self, keys: Iterable[str], from_hint: bool,
+                evictable: bool) -> None:
+        if self._pool is None:
+            return
+        with self._lock:
+            keys = list(keys)
+            if not evictable:
+                # a certain hint supersedes an earlier speculative one for
+                # the same key: the segment WILL be consumed now, so it must
+                # no longer be eviction-eligible
+                for k in keys:
+                    entry = self._inflight.get(k)
+                    if entry is not None and entry[2]:
+                        self._inflight[k] = (entry[0], entry[1], False)
+            fresh = [k for k in keys
+                     if k in self.index and k not in self._inflight]
+            # evict oldest completed *evictable* entries (abandoned
+            # predictions) so unconsumed speculation cannot pin the archive;
+            # certain entries are always consumed by their caller, and
+            # evicting one would force a duplicate transfer
+            over = len(self._inflight) + len(fresh) - self.max_inflight
+            if over > 0:
+                for k in [k for k, (f, _, ev) in self._inflight.items()
+                          if ev and f.done()][:over]:
+                    del self._inflight[k]
+            for k in fresh:
+                self._inflight[k] = (self._pool.submit(self._read_verified, k),
+                                     from_hint, evictable)
+                self.stats.prefetch_issued += from_hint
+
+    def drain(self) -> None:
+        """Wait for all in-flight prefetches (tests/benchmarks)."""
+        with self._lock:
+            futs = [f for f, _, _ in self._inflight.values()]
+        for f in futs:
+            try:
+                f.result()
+            except Exception:       # surfaced on the consuming fetch instead
+                pass
+
+    @property
+    def outstanding(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "SegmentFetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

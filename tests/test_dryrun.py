@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.models.config import SHAPES, cell_is_runnable
 from repro.train.sharding import (
@@ -22,8 +23,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", configs.names())
@@ -51,8 +51,7 @@ def test_decode_state_pspecs_match_state(arch, mesh):
 
 def test_sanitize_drops_nondivisible():
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     mesh16 = None
     # simulate a 16-wide axis via a fake mesh-shape lookup
     class FakeMesh:

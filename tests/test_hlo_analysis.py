@@ -63,8 +63,8 @@ def test_nested_scan_multiplies():
 
 def test_collective_bytes_counted():
     """psum in shard_map (1-device mesh still emits all-reduce)."""
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("x",))
     try:
         from jax.experimental.shard_map import shard_map
     except ImportError:

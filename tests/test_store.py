@@ -1,0 +1,292 @@
+"""Segment store subsystem: container round-trips, checksum verification,
+prefetch equivalence, and transport accounting."""
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import ge
+from repro.core.refactor import METHODS, refactor_variables
+from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
+from repro.data.synthetic import ge_like_fields
+from repro.store import (
+    ChecksumError,
+    FileByteStore,
+    MemoryByteStore,
+    RemoteByteStore,
+    crc32c,
+    memory_store_archive,
+    open_archive,
+    save_archive,
+)
+from repro.store.container import MAGIC
+
+
+def _vel_fields(n=1 << 12, seed=0):
+    fields = ge_like_fields(n=n, seed=seed)
+    return {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+
+
+# ------------------------------------------------------------------ crc32c --
+
+
+def test_crc32c_vectors():
+    # RFC 3720 / iSCSI test vectors
+    assert crc32c(b"") == 0
+    assert crc32c(b"123456789") == 0xE3069283
+    assert crc32c(bytes(32)) == 0x8A9136AA
+    assert crc32c(b"\xff" * 32) == 0x62A8AB43
+
+
+def test_crc32c_fast_path_matches_scalar_and_chains():
+    rng = np.random.default_rng(0)
+    for size in (1, 7, 8, 1023, 1024, 1031, 4099, 70000):
+        buf = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+        whole = crc32c(buf)
+        # chaining across an arbitrary split must equal the one-shot hash
+        # (and exercises both the vectorized and scalar code paths)
+        cut = size // 3
+        assert crc32c(buf[cut:], crc32c(buf[:cut])) == whole
+
+
+# ------------------------------------------------------- container format --
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_file_roundtrip_bit_identical(method, tmp_path):
+    """A reopened file-backed archive reconstructs bit-identically to the
+    in-memory session at every bound, with identical achieved bounds and
+    byte accounting — for all four progressive methods."""
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method=method)
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    mem = arch.open()
+    with open_archive(path) as store_arch:
+        st = store_arch.open()
+        for eps in (1e-1, 1e-3, 1e-6):
+            for v in vel:
+                a, ba = mem.reconstruct(v, eps)
+                b, bb = st.reconstruct(v, eps)
+                np.testing.assert_array_equal(a, b)
+                assert ba == bb
+        assert mem.bytes_retrieved == st.bytes_retrieved
+        assert mem.bitrate(list(vel)) == st.bitrate(list(vel))
+
+
+def test_roundtrip_metadata_and_masks(tmp_path):
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    with open_archive(path) as sa:
+        assert sa.method == "hb"
+        assert sa.shapes == arch.shapes
+        assert sa.ranges == arch.ranges      # exact float round-trip
+        for name, mask in arch.masks.items():
+            loaded = sa.masks[name]
+            np.testing.assert_array_equal(loaded.mask, mask.mask)
+            np.testing.assert_array_equal(loaded.values, mask.values)
+            assert loaded.nbytes == mask.nbytes
+
+
+def test_memory_store_matches_file_store(tmp_path):
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    with open_archive(path) as fa:
+        ma = memory_store_archive(arch)
+        f, m = fa.open(), ma.open()
+        for v in vel:
+            a, _ = f.reconstruct(v, 1e-5)
+            b, _ = m.reconstruct(v, 1e-5)
+            np.testing.assert_array_equal(a, b)
+
+
+def test_resolution_progression_through_store(tmp_path):
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    mem = arch.open()
+    with open_archive(path) as sa:
+        st = sa.open()
+        a, ba = mem.reconstruct_at_resolution("Vx", 2, 1e-4)
+        b, bb = st.reconstruct_at_resolution("Vx", 2, 1e-4)
+        np.testing.assert_array_equal(a, b)
+        assert ba == bb
+
+
+def test_open_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "junk.prs")
+    with open(path, "wb") as fh:
+        fh.write(b"NOTASTORE" + bytes(64))
+    with pytest.raises(ValueError, match="magic"):
+        open_archive(path)
+
+
+# ------------------------------------------------------------- checksums --
+
+
+def test_checksum_corruption_detected(tmp_path):
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    # largest segment: most likely to actually be consumed by a request
+    with open_archive(path) as sa:
+        key, entry = max(sa.fetcher.index.items(), key=lambda kv: kv[1].size)
+    with open(path, "r+b") as fh:
+        fh.seek(entry.offset + entry.size // 2)
+        b = fh.read(1)
+        fh.seek(entry.offset + entry.size // 2)
+        fh.write(bytes([b[0] ^ 0x40]))
+    with open_archive(path) as sa:
+        with pytest.raises(ChecksumError, match="crc32c"):
+            sa.fetcher.fetch(key)
+    # verify=False trusts the transport (decode may still fail downstream,
+    # but the fetch itself must not raise)
+    with open_archive(path, verify=False) as sa:
+        sa.fetcher.fetch(key)
+
+
+def test_corruption_surfaces_through_retrieval(tmp_path):
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    with open(path, "rb") as fh:
+        head = fh.read(len(MAGIC) + 8)
+    (mlen,) = struct.unpack("<Q", head[len(MAGIC):])
+    payload_start = len(MAGIC) + 8 + mlen
+    size = os.path.getsize(path)
+    with open(path, "r+b") as fh:   # flip one payload bit mid-file
+        pos = payload_start + (size - payload_start) // 2
+        fh.seek(pos)
+        b = fh.read(1)
+        fh.seek(pos)
+        fh.write(bytes([b[0] ^ 0x01]))
+    with open_archive(path) as sa:
+        st = sa.open()
+        with pytest.raises(ChecksumError):
+            for v in vel:            # full-precision pull touches everything
+                st.reconstruct(v, 1e-15)
+
+
+# ------------------------------------------------------------- prefetch --
+
+
+def test_prefetch_equals_no_prefetch_on_arbitrary_schedule(tmp_path):
+    """Any interleaved fetch schedule with prefetch hints lands on the same
+    bits and the same consumed-byte accounting as the plain path."""
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    rng = np.random.default_rng(7)
+    schedule = [(str(rng.choice(list(vel))), float(10.0 ** -rng.integers(1, 8)))
+                for _ in range(24)]
+    with open_archive(path, prefetch_workers=0) as plain_arch, \
+            open_archive(path, prefetch_workers=3) as pf_arch:
+        plain, pf = plain_arch.open(), pf_arch.open()
+        for name, eps in schedule:
+            # over-eager hints: future eps the schedule may never request
+            pf.prefetch(name, eps / 10.0)
+            a, ba = plain.reconstruct(name, eps)
+            b, bb = pf.reconstruct(name, eps)
+            np.testing.assert_array_equal(a, b)
+            assert ba == bb
+            assert plain.bytes_retrieved == pf.bytes_retrieved
+        assert pf_arch.fetcher.stats.prefetch_hits > 0
+
+
+def test_qoi_retrieval_store_vs_memory_with_prefetch(tmp_path):
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    reqs = [QoIRequest("VTOT", ge.v_total(), 1e-4)]
+    ref = retrieve_qoi_controlled(arch.open(), reqs)
+    with open_archive(path, prefetch_workers=2) as sa:
+        res = retrieve_qoi_controlled(sa.open(), reqs)
+        for v in vel:
+            np.testing.assert_array_equal(ref.values[v], res.values[v])
+        assert ref.bytes_retrieved == res.bytes_retrieved
+        assert ref.est_errors == res.est_errors
+        assert res.converged
+
+
+def test_snapshot_prefetch_respects_never_go_backwards(tmp_path):
+    """A certain hint at a LOOSER eps than an already-decoded snapshot must
+    not move a coarser snapshot request() will never decode (psz3 snapshots
+    are independent; request reuses the cached tighter one)."""
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method="psz3")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    with open_archive(path, prefetch_workers=2) as sa:
+        st = sa.open()
+        st.reconstruct("Vx", 1e-6)          # tight snapshot decoded
+        moved = sa.fetcher.stats.bytes_fetched
+        st.prefetch("Vx", 1e-2)             # looser: must be a no-op
+        sa.fetcher.drain()
+        assert sa.fetcher.stats.bytes_fetched == moved
+        a, _ = st.reconstruct("Vx", 1e-2)   # served from the cached decode
+        assert sa.fetcher.stats.bytes_fetched == moved
+
+
+@pytest.mark.parametrize("method", ("psz3", "psz3_delta"))
+def test_snapshot_prefetch_hint(method, tmp_path):
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method=method)
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    with open_archive(path, prefetch_workers=2) as sa:
+        st = sa.open()
+        st.prefetch("Vx", 1e-4)
+        sa.fetcher.drain()
+        issued = sa.fetcher.stats.prefetch_issued
+        assert issued > 0
+        a, _ = st.reconstruct("Vx", 1e-4)
+        assert sa.fetcher.stats.prefetch_hits == issued   # nothing wasted
+        b, _ = arch.open().reconstruct("Vx", 1e-4)
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ bytestores --
+
+
+def test_remote_store_accounting_and_equality(tmp_path):
+    vel = _vel_fields(n=1 << 10)
+    arch = refactor_variables(vel, method="hb")
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    remote = RemoteByteStore(FileByteStore(path), latency_s=1e-5,
+                             bandwidth_bps=1e9)
+    with open_archive(remote) as sa:
+        st = sa.open()
+        a, _ = st.reconstruct("Vx", 1e-4)
+        b, _ = arch.open().reconstruct("Vx", 1e-4)
+        np.testing.assert_array_equal(a, b)
+        assert remote.stats.requests > 0
+        assert remote.stats.busy_s > 0
+        # every segment byte the fetcher saw crossed the simulated link
+        # (plus the container header + manifest reads)
+        assert remote.stats.bytes_moved >= sa.fetcher.stats.bytes_fetched
+
+
+def test_bytestore_bounds_checking(tmp_path):
+    ms = MemoryByteStore(b"0123456789")
+    assert ms.read(2, 3) == b"234"
+    with pytest.raises(EOFError):
+        ms.read(8, 5)
+    path = str(tmp_path / "f.bin")
+    with open(path, "wb") as fh:
+        fh.write(b"abcdef")
+    with FileByteStore(path) as fs:
+        assert fs.read(1, 3) == b"bcd"
+        assert fs.size == 6
+        with pytest.raises(EOFError):
+            fs.read(4, 4)

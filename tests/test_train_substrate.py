@@ -160,8 +160,8 @@ def test_compressed_psum_matches_mean():
         shard_map = jax.shard_map
     from jax.sharding import PartitionSpec as P
     from repro.train.grad_compress import compressed_psum
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(64),
                           jnp.float32)}
     fb = {"w": jnp.zeros(64, jnp.float32)}
