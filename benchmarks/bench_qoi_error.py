@@ -7,7 +7,6 @@ Validated invariants: actual <= estimated (guarantee) and actual <= τ_abs
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import actual_qoi_error, timed
 from repro.core import ge

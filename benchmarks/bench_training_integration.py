@@ -13,7 +13,6 @@ import numpy as np
 
 from benchmarks.common import timed
 from repro import configs
-from repro.data.batches import make_train_batch
 from repro.models import transformer as T
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
 from repro.train.grad_compress import payload_bytes

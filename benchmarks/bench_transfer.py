@@ -35,8 +35,9 @@ from repro.core import ge
 from repro.core.refactor import refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
-from repro.store import FileByteStore, RemoteByteStore, open_archive, \
-    save_archive
+from repro.store import FileByteStore, HTTPByteStore, RemoteByteStore, \
+    open_archive, save_archive
+from repro.store.httpd import StoreHTTPServer
 
 BW_EFF = 400e6  # B/s effective WAN throughput (paper: 4.67GB / 11.7s)
 TAUS = (1e-1, 1e-2, 1e-3, 1e-4, 1e-5)
@@ -117,6 +118,23 @@ def _store_rows():
                          f"hit_rate={st.hit_rate:.2f};"
                          f"overlap_speedup={dt_s / dt_p:.2f};"
                          f"overlapped={dt_p < dt_s}"))
+        # the same session over a REAL wire (loopback HTTP ranged GETs):
+        # consumed bytes must match the modelled link exactly — the link
+        # model and the HTTP backend disagree only in wall time
+        with StoreHTTPServer(path) as srv:
+            hs = HTTPByteStore(srv.url)
+            with open_archive(hs, prefetch_workers=4) as ha:
+                session = ha.open()
+                t0 = time.perf_counter()
+                res = retrieve_qoi_controlled(
+                    session, [QoIRequest("VTOT", ge.v_total(), 1e-5)])
+                dt_h = time.perf_counter() - t0
+                rows.append(("transfer/http/tau=1e-05", dt_h * 1e6,
+                             f"consumed={res.bytes_retrieved};"
+                             f"bytes_equal={res.bytes_retrieved == used_p};"
+                             f"requests={hs.stats.requests};"
+                             f"coalesced={hs.stats.coalesced_ranges};"
+                             f"hit_rate={ha.fetcher.stats.hit_rate:.2f}"))
     finally:
         os.unlink(path)
     return rows

@@ -1,0 +1,124 @@
+"""Bench-regression gate: diff a fresh bench run against the committed
+baseline and fail on perf drift.
+
+    PYTHONPATH=src python -m benchmarks.run --only store --json /tmp/cur.json
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_kernels.json --current /tmp/cur.json --tolerance 1.5
+
+Only rows present in BOTH files are compared (a --only run produces a
+subset), and rows faster than ``--min-us`` in both are skipped — they sit
+inside scheduler noise.  The check is two-sided by default:
+
+  * REGRESSION      current > baseline * tolerance  -> exit 1.  The PR made
+                    a tracked path slower than runner noise can explain.
+  * STALE-BASELINE  current < baseline / tolerance  -> exit 1 (disable with
+                    --one-sided).  The committed baseline no longer
+                    describes the code — an artificially inflated (or
+                    simply outdated) entry would mask future regressions up
+                    to its inflation factor, so it must be re-recorded
+                    (run ``benchmarks.run`` without --only and commit the
+                    refreshed BENCH_kernels.json).
+
+The tolerance absorbs CI-runner noise; 1.5x is loose enough for shared
+runners on µs-scale rows, tight enough to catch an accidental O(n) -> O(n²).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+OK = "ok"
+REGRESSION = "REGRESSION"
+STALE = "STALE-BASELINE"
+SKIPPED = "skip (noise)"
+
+
+def compare(baseline: Dict[str, dict], current: Dict[str, dict],
+            tolerance: float = 1.5, min_us: float = 50.0,
+            two_sided: bool = True,
+            prefixes: Optional[List[str]] = None
+            ) -> Tuple[List[Tuple[str, float, float, float, str]], List[str]]:
+    """Returns (table rows ``(name, base_us, cur_us, ratio, status)``,
+    failing row names)."""
+    if tolerance <= 1.0:
+        raise ValueError(f"tolerance must be > 1.0, got {tolerance}")
+    rows: List[Tuple[str, float, float, float, str]] = []
+    failures: List[str] = []
+    for name in sorted(set(baseline) & set(current)):
+        if prefixes and not any(name.startswith(p) for p in prefixes):
+            continue
+        base = float(baseline[name]["us_per_call"])
+        cur = float(current[name]["us_per_call"])
+        ratio = cur / base if base > 0 else (1.0 if cur == 0 else float("inf"))
+        if base < min_us and cur < min_us:
+            status = SKIPPED
+        elif ratio > tolerance:
+            status = REGRESSION
+        elif two_sided and ratio < 1.0 / tolerance:
+            status = STALE
+        else:
+            status = OK
+        if status in (REGRESSION, STALE):
+            failures.append(name)
+        rows.append((name, base, cur, ratio, status))
+    return rows, failures
+
+
+def format_table(rows) -> str:
+    name_w = max([len(r[0]) for r in rows] + [len("row")])
+    lines = [f"{'row':<{name_w}}  {'baseline_us':>12}  {'current_us':>12}  "
+             f"{'ratio':>7}  status",
+             "-" * (name_w + 48)]
+    for name, base, cur, ratio, status in rows:
+        lines.append(f"{name:<{name_w}}  {base:>12.1f}  {cur:>12.1f}  "
+                     f"{ratio:>6.2f}x  {status}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if tracked us_per_call rows drifted beyond the "
+                    "tolerance")
+    ap.add_argument("--baseline", default="BENCH_kernels.json")
+    ap.add_argument("--current", required=True,
+                    help="JSON written by `benchmarks.run --json PATH`")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="allowed ratio either way (default 1.5x, absorbs "
+                         "runner noise)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip rows faster than this in both runs")
+    ap.add_argument("--one-sided", action="store_true",
+                    help="only fail on regressions, not on stale/inflated "
+                         "baseline entries")
+    ap.add_argument("--prefix", action="append", default=None,
+                    help="only compare rows starting with this (repeatable)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.current) as fh:
+        current = json.load(fh)
+    rows, failures = compare(baseline, current, tolerance=args.tolerance,
+                             min_us=args.min_us,
+                             two_sided=not args.one_sided,
+                             prefixes=args.prefix)
+    if not rows:
+        print("bench gate: no overlapping rows between baseline and current "
+              "— nothing was checked", file=sys.stderr)
+        return 1
+    print(format_table(rows))
+    checked = sum(r[4] != SKIPPED for r in rows)
+    if failures:
+        print(f"\nbench gate: FAILED — {len(failures)} of {checked} tracked "
+              f"rows drifted beyond {args.tolerance}x: "
+              f"{', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"\nbench gate: ok — {checked} rows within {args.tolerance}x "
+          f"({len(rows) - checked} below the {args.min_us}us noise floor)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

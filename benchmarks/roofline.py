@@ -18,10 +18,10 @@ from __future__ import annotations
 import json
 import os
 import sys
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from repro import configs
-from repro.launch.analytic import attention_flops, hbm_bytes, model_flops, param_counts
+from repro.launch.analytic import attention_flops, hbm_bytes, model_flops
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.models.config import SHAPES
 

@@ -36,7 +36,7 @@ module remains the host/archival container; the hot loops live in
 from __future__ import annotations
 
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -13,7 +13,7 @@ requests. decoded_i = Σ_{j<=i} decode_j, with |x - decoded_i|_inf <= ε_i.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -8,8 +8,7 @@ c=1.5 tightening, zero-velocity outlier masks, and the PSZ3 ladders
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Tuple
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

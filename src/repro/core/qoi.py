@@ -15,7 +15,7 @@ Expressions are plain Python trees of jnp ops: jit-able by closure, vmap-safe.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Sequence, Tuple
 
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ from-scratch sessions in tests/test_incremental_recompose.py.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -20,7 +20,7 @@ unattainable mid-retrieval).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -108,6 +108,18 @@ def retrieve_qoi_controlled(session,
     eps = assign_eb(requests, ranges)
     floors = {v: MIN_REL_EPS * ranges[v] for v in needed}
     prefetch = getattr(session, "prefetch", None)
+    # Certain hints already forwarded, keyed by their eps: reassign only
+    # tightens the involved variables, so re-hinting an unchanged variable
+    # every round is pure reader/fetcher-lock churn (it resolves to planes
+    # the session has already consumed) — worth skipping now that hints may
+    # cross a real wire's submission path.  Speculative (certain=False)
+    # predictions stay unconditional: their eps varies per round.
+    hinted: Dict[str, float] = {}
+
+    def hint(v: str, e: float) -> None:
+        if prefetch is not None and hinted.get(v) != e:
+            prefetch(v, e)
+            hinted[v] = e
     logs: List[IterationLog] = []
     values: Dict[str, np.ndarray] = {}
     eb_arrays: Dict[str, np.ndarray] = {}
@@ -118,9 +130,8 @@ def retrieve_qoi_controlled(session,
         # -- progressive reconstruction at current bounds (lines 9-11).
         # Hint every variable's fetch up front: the store fetcher starts
         # moving later variables' segments while earlier variables decode.
-        if prefetch is not None:
-            for v in needed:
-                prefetch(v, eps[v])
+        for v in needed:
+            hint(v, eps[v])
         for v in needed:
             data, ach = session.reconstruct(v, eps[v])
             values[v] = data
@@ -221,9 +232,8 @@ def retrieve_qoi_controlled(session,
         # -- the landing state is now exact: prefetch the full next-round
         # plane set so transport overlaps the remaining bookkeeping and the
         # per-variable decode/recompose of the next reconstruct pass.
-        if prefetch is not None:
-            for v in involved:
-                prefetch(v, eps[v])
+        for v in involved:
+            hint(v, eps[v])
         if at_floor:
             # full fidelity reached and still unbounded -> retrieve all and stop
             for v in involved:

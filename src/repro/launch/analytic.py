@@ -15,7 +15,7 @@ traffic model is analytic.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import numpy as np

@@ -12,7 +12,6 @@ import sys
 
 from repro.launch.hlo_analysis import (
     _build_multipliers, _shape_bytes, _split_computations, COLLECTIVE_OPS,
-    analyze_hlo,
 )
 
 

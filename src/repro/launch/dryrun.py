@@ -21,10 +21,9 @@ import re
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
@@ -33,9 +32,9 @@ from repro.data.batches import decode_token_spec, train_input_specs
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
-from repro.models.config import SHAPES, ModelConfig, ShapeSpec, cell_is_runnable
+from repro.models.config import SHAPES, cell_is_runnable
 from repro.train.sharding import (
-    batch_pspecs, decode_state_pspecs, dp_axes, opt_state_pspecs,
+    batch_pspecs, decode_state_pspecs, opt_state_pspecs,
     param_pspecs, sanitize_pspecs,
 )
 from repro.train.train_step import make_serve_step, make_train_step

@@ -18,7 +18,7 @@ import sys
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 try:
     from jax.experimental.shard_map import shard_map
@@ -29,7 +29,7 @@ from repro import configs
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
-from repro.train.grad_compress import compressed_psum, zeros_like_feedback
+from repro.train.grad_compress import compressed_psum
 
 
 def lower_grad_sync(arch: str, k_planes: int = 0):

@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --requests 16
     PYTHONPATH=src python -m repro.launch.serve --store /data/ge.prs
+    PYTHONPATH=src python -m repro.launch.serve --store /data/ge_dir --shard-by variable
+    PYTHONPATH=src python -m repro.launch.serve --store http://host:8000/manifest.json
 
 Simulates the production deployment of Fig 1: data is refactored once into
 progressive archives ("storage"); a stream of analysis requests arrives,
@@ -10,11 +12,15 @@ answers with guaranteed-error reconstructions. Sessions are sticky, so a
 client tightening its tolerance pays only for the new segments (the
 incremental-recomposition contract).
 
-With ``--store PATH`` the server serves from an on-disk archive container
-(repro.store): if PATH is missing it refactors once and saves it, then — in
-either case — reopens the container and streams checksum-verified segments
-through the SegmentFetcher (mmap'd range reads + async prefetch) instead of
-holding the refactored archive in RAM.
+With ``--store`` the server serves from an archive container (repro.store)
+instead of holding the refactored archive in RAM — a local ``.prs`` file
+(refactored + saved on first run if missing), a sharded directory
+(``--shard-by variable|group``), or an ``http(s)://`` URL of a container /
+sharded manifest published by ``repro.store.httpd``.  Segments stream
+checksum-verified through the SegmentFetcher (ranged reads + async
+prefetch), and a cross-session `SegmentCache` sits under all client
+sessions: planes one client already pulled are served from RAM to every
+other client instead of re-fetched from the store.
 """
 from __future__ import annotations
 
@@ -30,7 +36,9 @@ from repro.core import ge
 from repro.core.refactor import refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
-from repro.store import open_archive, save_archive
+from repro.store import (SegmentCache, open_archive, save_archive,
+                         save_sharded_archive)
+from repro.store.container import is_url
 
 
 @dataclass
@@ -42,13 +50,22 @@ class Request:
 
 class RetrievalServer:
     def __init__(self, fields, method: str = "hb",
-                 store_path: Optional[str] = None):
+                 store_path: Optional[str] = None,
+                 shard_by: Optional[str] = None,
+                 cache_bytes: int = 256 << 20):
         t0 = time.time()
+        self.cache: Optional[SegmentCache] = None
         if store_path is not None:
-            if not os.path.exists(store_path):
-                save_archive(refactor_variables(fields, method=method),
-                             store_path)
-            self.archive = open_archive(store_path)
+            if not is_url(store_path) and not os.path.exists(store_path):
+                if shard_by:
+                    save_sharded_archive(
+                        refactor_variables(fields, method=method),
+                        store_path, shard_by=shard_by)
+                else:
+                    save_archive(refactor_variables(fields, method=method),
+                                 store_path)
+            self.cache = SegmentCache(max_bytes=cache_bytes)
+            self.archive = open_archive(store_path, cache=self.cache)
             shapes = {k: np.asarray(v).shape for k, v in fields.items()}
             if self.archive.method != method or self.archive.shapes != shapes:
                 raise SystemExit(
@@ -83,14 +100,23 @@ def main(argv=None) -> int:
     ap.add_argument("--n", type=int, default=1 << 15)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--method", default="hb")
-    ap.add_argument("--store", default=None, metavar="PATH",
-                    help="serve from an archive container at PATH "
-                         "(refactor+save first if it does not exist)")
+    ap.add_argument("--store", default=None, metavar="PATH_OR_URL",
+                    help="serve from an archive container: a .prs path "
+                         "(refactor+save first if it does not exist), a "
+                         "sharded directory, or an http(s):// URL")
+    ap.add_argument("--shard-by", default=None,
+                    choices=("variable", "group"),
+                    help="when creating a missing --store, write a sharded "
+                         "directory (one payload blob per variable / level "
+                         "group) instead of a single file")
+    ap.add_argument("--cache-mb", type=int, default=256,
+                    help="cross-session segment cache budget (MiB)")
     args = ap.parse_args(argv)
 
     fields = ge_like_fields(n=args.n, seed=0)
     server = RetrievalServer(fields, method=args.method,
-                             store_path=args.store)
+                             store_path=args.store, shard_by=args.shard_by,
+                             cache_bytes=args.cache_mb << 20)
     src = f"store {args.store}" if args.store else "in-memory archive"
     print(f"[server] {src} ready for {args.n} pts x5 vars in "
           f"{server.refactor_s:.2f}s "
@@ -116,10 +142,17 @@ def main(argv=None) -> int:
           f"{raw / 2**20:.2f} MiB ({total_bytes / raw:.0%})")
     if args.store:
         st = server.archive.fetcher.stats
-        print(f"[server] store: {st.bytes_fetched} segment bytes fetched, "
+        print(f"[server] store: {st.bytes_fetched} segment bytes fetched in "
+              f"{st.store_reads} reads, "
               f"{st.demand_fetches} demand / {st.pipelined_hits} pipelined / "
               f"{st.prefetch_hits} predicted (hit rate {st.hit_rate:.0%}), "
               f"blocked {st.demand_wait_s * 1e3:.1f}ms")
+        if server.cache is not None:
+            cs = server.cache.stats
+            print(f"[server] cache: {st.cache_hits} segment reads served "
+                  f"from RAM ({cs.hits} hits / {cs.misses} misses, "
+                  f"{server.cache.nbytes / 2**20:.2f} MiB resident, "
+                  f"{cs.evictions} evicted)")
         server.archive.close()
     return 0
 

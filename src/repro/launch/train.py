@@ -28,7 +28,6 @@ from repro.models import transformer as T
 from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.train.grad_compress import compress_decompress, zeros_like_feedback
 from repro.train.optimizer import clip_by_global_norm, make_optimizer
-from repro.train.train_step import make_train_step
 
 
 def main(argv=None) -> int:

@@ -17,10 +17,9 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.layers import _dt, _pdt, rmsnorm
+from repro.models.layers import _pdt, rmsnorm
 
 Array = jnp.ndarray
 Params = Dict[str, Array]

@@ -18,7 +18,6 @@ jax.checkpoint remat around the layer body.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

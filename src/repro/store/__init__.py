@@ -1,27 +1,35 @@
 """Segment store & transport: archive container, byte stores, prefetching.
 
 The paper's headline is a data-*transfer* win; this package is the layer
-that actually moves bytes.  ``save_archive`` serializes a refactored
-`Archive` (any of the four methods) into a manifest + segment blob
-container; ``open_archive`` serves it back through pluggable ByteStore
-backends (RAM, mmap'd file, simulated WAN link) with per-segment crc32c
-verification and a SegmentFetcher that prefetches predicted planes in the
-background while the QoI estimator runs.
+that actually moves bytes.  ``save_archive`` / ``save_sharded_archive``
+serialize a refactored `Archive` (any of the four methods) into a manifest
++ segment payload container — one blob, or one blob per variable / level
+group; ``open_archive`` serves it back through pluggable ByteStore backends
+(RAM, mmap'd file, real HTTP ranged GETs, simulated WAN link) with
+per-segment crc32c verification, a SegmentFetcher that prefetches predicted
+planes in the background while the QoI estimator runs, and an optional
+cross-session SegmentCache so concurrent clients don't re-fetch shared
+planes.  ``repro.store.httpd`` is the matching stdlib ranged-GET endpoint.
 """
 from repro.store.bytestore import (
     ByteStore,
     FileByteStore,
+    HTTPByteStore,
+    HTTPStats,
     MemoryByteStore,
     RemoteByteStore,
 )
+from repro.store.cache import CacheStats, SegmentCache
 from repro.store.container import (
     StoreArchive,
     StoreBitplaneVar,
     StoreSnapshotVar,
     build_container,
+    build_sharded_container,
     memory_store_archive,
     open_archive,
     save_archive,
+    save_sharded_archive,
 )
 from repro.store.crc import crc32c
 from repro.store.fetcher import (
@@ -32,8 +40,12 @@ from repro.store.fetcher import (
 )
 
 __all__ = [
-    "ByteStore", "MemoryByteStore", "FileByteStore", "RemoteByteStore",
+    "ByteStore", "MemoryByteStore", "FileByteStore", "HTTPByteStore",
+    "HTTPStats", "RemoteByteStore",
+    "SegmentCache", "CacheStats",
     "StoreArchive", "StoreBitplaneVar", "StoreSnapshotVar",
-    "build_container", "save_archive", "open_archive", "memory_store_archive",
+    "build_container", "build_sharded_container",
+    "save_archive", "save_sharded_archive",
+    "open_archive", "memory_store_archive",
     "crc32c", "SegmentFetcher", "SegmentEntry", "FetchStats", "ChecksumError",
 ]

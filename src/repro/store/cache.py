@@ -1,0 +1,89 @@
+"""Cross-session segment cache.
+
+Within one `RetrievalSession`, segments are consumed at most once (plane
+fetches are a monotone prefix per group), so the SegmentFetcher *pops*
+completed reads — correct for a single client, but a server running many
+sessions over the same archive re-fetches identical planes for every
+client.  `SegmentCache` sits under the fetcher: verified segment bytes are
+inserted after their first store read and served to every later session
+without touching the ByteStore (see ``FetchStats.store_reads`` vs
+``cache_hits``).
+
+Keys are ``(segment_key, crc32c)`` pairs: the crc disambiguates segments of
+different archives sharing one cache, and means a hit never needs
+re-verification — the bytes were hashed against the manifest when inserted.
+
+Eviction is LRU by byte budget.  A progressive workload is front-loaded
+(every client wants the MSB planes; only tight-tolerance clients descend),
+so LRU keeps exactly the shared prefix hot.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Hashable, Optional
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+
+
+class SegmentCache:
+    """Thread-safe LRU byte cache, bounded by total cached bytes."""
+
+    def __init__(self, max_bytes: int = 256 << 20):
+        if max_bytes <= 0:
+            raise ValueError(f"max_bytes must be positive, got {max_bytes}")
+        self.max_bytes = int(max_bytes)
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Hashable, bytes]" = OrderedDict()
+        self._nbytes = 0
+
+    def get(self, key: Hashable) -> Optional[bytes]:
+        with self._lock:
+            data = self._entries.get(key)
+            if data is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return data
+
+    def put(self, key: Hashable, data: bytes) -> None:
+        if len(data) > self.max_bytes:
+            return                      # would evict everything for one entry
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._nbytes -= len(old)
+            self._entries[key] = data
+            self._nbytes += len(data)
+            self.stats.insertions += 1
+            while self._nbytes > self.max_bytes:
+                _, victim = self._entries.popitem(last=False)
+                self._nbytes -= len(victim)
+                self.stats.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._nbytes = 0
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return self._nbytes
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._entries

@@ -1,26 +1,36 @@
-"""On-disk archive container: manifest + concatenated segment blob.
+"""Archive containers: manifest + segment payload(s), single-file or sharded.
 
-Layout of a ``.prs`` container::
+Layout of a single-file ``.prs`` container::
 
     magic  b"PRSTORE1"                          (8 bytes)
     manifest length, uint64 little-endian       (8 bytes)
     manifest JSON (utf-8)
     payload: concatenated segments
 
+A *sharded* container (format v2) is a directory (or URL prefix, or any set
+of ByteStores) holding ``manifest.json`` plus one payload blob per shard —
+per variable (``Vx.seg``) or per level group (``Vx.g0.seg``) — so shards can
+be written in parallel, fetched from independent keys/URLs, mixed across
+backends via a blob resolver, and dropped per variable without rewriting
+the rest of the archive.
+
 The manifest carries everything *about* the archive — method, per-variable
 group metadata (counts, exponents, nbits, per-plane sizes), snapshot ladder
 metadata, outlier-mask shapes, value ranges — plus a segment index mapping
-``key -> (offset, size, crc32c)`` into the payload.  The payload carries
-only opaque segment bytes: one segment per bitplane, per sign plane, per
-snapshot blob, per mask bitmap / mask value array.  Offsets are relative to
-the payload start, so the payload can be re-hosted on any ByteStore (file,
-memory, behind a simulated WAN) without rewriting the manifest.
+``key -> (blob, offset, size, crc32c)`` into the payload blobs (v1
+manifests carry ``(offset, size, crc32c)``; both parse).  The payload
+carries only opaque segment bytes: one segment per bitplane, per sign
+plane, per snapshot blob, per mask bitmap / mask value array.  Offsets are
+relative to each blob's start, so payloads can be re-hosted on any
+ByteStore (file, memory, HTTP, behind a simulated WAN) without rewriting
+the manifest.
 
 ``save_archive`` serializes any `core.refactor.Archive` (all four methods);
-``open_archive`` yields a `StoreArchive` whose ``open()`` returns a regular
-`RetrievalSession` — readers stream checksum-verified segments through a
-`SegmentFetcher` instead of holding the encoded bytes, and reconstruction is
-bit-identical to an in-memory session at every requested bound.
+``save_sharded_archive`` writes the directory form; ``open_archive`` yields
+a `StoreArchive` whose ``open()`` returns a regular `RetrievalSession` —
+readers stream checksum-verified segments through a `SegmentFetcher`
+instead of holding the encoded bytes, and reconstruction is bit-identical
+to an in-memory session at every requested bound.
 
 JSON is a deliberate choice for the manifest: Python's float repr
 round-trips IEEE-754 doubles exactly, so eps ladders / ranges / amax survive
@@ -29,18 +39,18 @@ save->open bit-identically.
 from __future__ import annotations
 
 import json
+import os
 import struct
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+import urllib.parse
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.bitplane.encoder import LevelBitplanes, PlaneGroupMeta
+from repro.bitplane.encoder import PlaneGroupMeta
 from repro.bitplane.segments import PlaneSource
 from repro.compressors.snapshots import (
     DeltaSnapshotArchive,
     DeltaSnapshotReader,
-    SnapshotArchive,
     SnapshotReader,
 )
 from repro.compressors.szlike import SZCompressed, sz_decompress
@@ -52,13 +62,38 @@ from repro.core.refactor import (
     SnapshotVarArchive,
     _BitplaneVarReader,
 )
-from repro.store.bytestore import ByteStore, FileByteStore, MemoryByteStore
+from repro.store.bytestore import ByteStore, FileByteStore, HTTPByteStore, \
+    MemoryByteStore
+from repro.store.cache import SegmentCache
 from repro.store.crc import crc32c
 from repro.store.fetcher import SegmentEntry, SegmentFetcher
 from repro.transform.hierarchical import level_map
 
 MAGIC = b"PRSTORE1"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+MANIFEST_NAME = "manifest.json"
+
+SHARD_POLICIES = ("single", "variable", "group")
+
+
+def _shard_of(key: str, shard_by: str) -> str:
+    """Map a segment key to its payload blob name under a shard policy.
+
+    Keys look like ``Vx/g0/p3``, ``Vx/g0/signs``, ``Vx/s1/b0``,
+    ``Vx/mask/bitmap`` — the first component is always the variable.
+    """
+    if shard_by == "single":
+        return ""
+    parts = key.split("/")
+    var = parts[0]
+    if shard_by == "variable":
+        return f"{var}.seg"
+    if shard_by == "group":
+        if parts[1] == "mask":
+            return f"{var}.meta.seg"
+        return f"{var}.{parts[1]}.seg"      # g<l> (bitplane) / s<i> (snapshot)
+    raise ValueError(f"unknown shard policy {shard_by!r}; "
+                     f"choose from {SHARD_POLICIES}")
 
 
 # ---------------------------------------------------------------------------
@@ -67,21 +102,27 @@ FORMAT_VERSION = 1
 
 
 class _SegmentWriter:
-    def __init__(self):
-        self.index: Dict[str, List[int]] = {}
-        self.chunks: List[bytes] = []
-        self.offset = 0
+    """Routes segments into per-shard payload blobs; builds the v2 index."""
+
+    def __init__(self, shard_by: str = "single"):
+        self.shard_by = shard_by
+        self.index: Dict[str, List] = {}
+        self._chunks: Dict[str, List[bytes]] = {}
+        self._offsets: Dict[str, int] = {}
 
     def add(self, key: str, data: bytes, crc: Optional[int] = None) -> None:
         if key in self.index:
             raise ValueError(f"duplicate segment key {key!r}")
-        self.index[key] = [self.offset, len(data),
+        blob = _shard_of(key, self.shard_by)
+        off = self._offsets.get(blob, 0)
+        self.index[key] = [blob, off, len(data),
                            crc32c(data) if crc is None else crc]
-        self.chunks.append(data)
-        self.offset += len(data)
+        self._chunks.setdefault(blob, []).append(data)
+        self._offsets[blob] = off + len(data)
 
-    def payload(self) -> bytes:
-        return b"".join(self.chunks)
+    def payloads(self) -> Dict[str, bytes]:
+        return {blob: b"".join(chunks)
+                for blob, chunks in self._chunks.items()}
 
 
 def _bitplane_var_manifest(name: str, var: BitplaneVarArchive,
@@ -122,9 +163,11 @@ def _snapshot_var_manifest(name: str, var: SnapshotVarArchive,
     return out
 
 
-def build_container(archive: Archive) -> Tuple[dict, bytes]:
-    """Archive -> (manifest dict, payload bytes)."""
-    w = _SegmentWriter()
+def build_sharded_container(archive: Archive,
+                            shard_by: str = "variable"
+                            ) -> Tuple[dict, Dict[str, bytes]]:
+    """Archive -> (manifest dict, payload blobs keyed by blob name)."""
+    w = _SegmentWriter(shard_by=shard_by)
     variables: Dict[str, dict] = {}
     for name, var in archive.variables.items():
         if "/" in name:
@@ -142,6 +185,7 @@ def build_container(archive: Archive) -> Tuple[dict, bytes]:
               np.ascontiguousarray(m.values, dtype=np.float64).tobytes())
         masks[name] = {"shape": list(m.mask.shape),
                        "n_true": int(m.mask.sum())}
+    payloads = w.payloads()
     manifest = {
         "format": "prstore", "version": FORMAT_VERSION,
         "method": archive.method,
@@ -150,8 +194,15 @@ def build_container(archive: Archive) -> Tuple[dict, bytes]:
         "masks": masks,
         "variables": variables,
         "segments": w.index,
+        "blobs": {blob: len(data) for blob, data in payloads.items()},
     }
-    return manifest, w.payload()
+    return manifest, payloads
+
+
+def build_container(archive: Archive) -> Tuple[dict, bytes]:
+    """Archive -> (manifest dict, single payload bytes)."""
+    manifest, payloads = build_sharded_container(archive, shard_by="single")
+    return manifest, payloads.get("", b"")
 
 
 def save_archive(archive: Archive, path: str) -> int:
@@ -164,6 +215,28 @@ def save_archive(archive: Archive, path: str) -> int:
         fh.write(blob)
         fh.write(payload)
     return len(MAGIC) + 8 + len(blob) + len(payload)
+
+
+def save_sharded_archive(archive: Archive, directory: str,
+                         shard_by: str = "variable") -> int:
+    """Serialize ``archive`` as ``directory/manifest.json`` + one payload
+    file per shard; returns total bytes written.  Shards are independent
+    files, so they can be uploaded to independent object-store keys and a
+    variable can be dropped by deleting its blob(s) — sessions that never
+    touch it keep working."""
+    if shard_by == "single":
+        raise ValueError("use save_archive for single-payload containers")
+    manifest, payloads = build_sharded_container(archive, shard_by=shard_by)
+    os.makedirs(directory, exist_ok=True)
+    total = 0
+    for blob, data in payloads.items():
+        with open(os.path.join(directory, blob), "wb") as fh:
+            fh.write(data)
+        total += len(data)
+    mblob = json.dumps(manifest, sort_keys=True, indent=1).encode("utf-8")
+    with open(os.path.join(directory, MANIFEST_NAME), "wb") as fh:
+        fh.write(mblob)
+    return total + len(mblob)
 
 
 # ---------------------------------------------------------------------------
@@ -370,30 +443,59 @@ class _LazyMasks:
         return [self[k] for k in self._specs]
 
 
-class StoreArchive:
-    """An archive whose segments live on a ByteStore; ``open()`` returns a
-    regular RetrievalSession streaming through the SegmentFetcher."""
+StoreSpec = Union[ByteStore, Dict[str, ByteStore],
+                  Callable[[str], ByteStore]]
 
-    def __init__(self, manifest: dict, store: ByteStore,
+
+def _parse_segment_index(manifest: dict, payload_offset: int
+                         ) -> Dict[str, SegmentEntry]:
+    """v2 entries are (blob, offset, size, crc); v1 are (offset, size, crc)
+    with an implicit single blob ``""``.  ``payload_offset`` shifts only the
+    single-file blob (whose payload follows the in-file manifest)."""
+    index: Dict[str, SegmentEntry] = {}
+    for key, entry in manifest["segments"].items():
+        if len(entry) == 4:
+            blob, off, size, crc = entry
+        else:
+            blob, (off, size, crc) = "", entry
+        index[key] = SegmentEntry(
+            offset=off + (payload_offset if blob == "" else 0),
+            size=size, crc=crc, blob=blob)
+    return index
+
+
+class StoreArchive:
+    """An archive whose segments live on one or more ByteStores; ``open()``
+    returns a regular RetrievalSession streaming through the SegmentFetcher.
+
+    ``store`` may be a single ByteStore (single-blob containers), a mapping
+    ``blob name -> ByteStore`` (sharded, backends may differ per shard), or
+    a resolver callable ``blob name -> ByteStore`` invoked lazily on first
+    touch — sessions that never read a shard never open (or require) it.
+
+    ``cache`` is an optional cross-session `SegmentCache`: sessions opened
+    from this archive (or any archive sharing the cache object) serve
+    repeat segment reads from RAM instead of the backing store.
+    """
+
+    def __init__(self, manifest: dict, store: StoreSpec,
                  payload_offset: int = 0, prefetch_workers: int = 2,
-                 verify: bool = True):
+                 verify: bool = True,
+                 cache: Optional[SegmentCache] = None):
         if manifest.get("format") != "prstore":
             raise ValueError("not a prstore manifest")
         if manifest.get("version", 0) > FORMAT_VERSION:
             raise ValueError(f"container version {manifest.get('version')} "
                              f"newer than supported {FORMAT_VERSION}")
         self.manifest = manifest
-        self.store = store
         self.method: str = manifest["method"]
         self.ranges: Dict[str, float] = dict(manifest["ranges"])
         self.shapes: Dict[str, Tuple[int, ...]] = {
             k: tuple(v) for k, v in manifest["shapes"].items()}
-        index = {k: SegmentEntry(offset=payload_offset + off, size=size,
-                                 crc=crc)
-                 for k, (off, size, crc) in manifest["segments"].items()}
+        index = _parse_segment_index(manifest, payload_offset)
         self.fetcher = SegmentFetcher(index, store,
                                       prefetch_workers=prefetch_workers,
-                                      verify=verify)
+                                      verify=verify, cache=cache)
         self.masks = _LazyMasks(manifest["masks"], self.fetcher)
         self.variables: Dict[str, object] = {}
         for name, spec in manifest["variables"].items():
@@ -405,9 +507,12 @@ class StoreArchive:
                                                         self.fetcher)
 
     @property
+    def cache(self) -> Optional[SegmentCache]:
+        return self.fetcher.cache
+
+    @property
     def total_nbytes(self) -> int:
-        return sum(size for _, size, _ in
-                   self.manifest["segments"].values())
+        return sum(e.size for e in self.fetcher.index.values())
 
     def n_elements(self, name: str) -> int:
         return int(np.prod(self.shapes[name]))
@@ -419,7 +524,7 @@ class StoreArchive:
 
     def close(self) -> None:
         self.fetcher.close()
-        self.store.close()
+        self.fetcher.close_stores()
 
     def __enter__(self) -> "StoreArchive":
         return self
@@ -428,32 +533,101 @@ class StoreArchive:
         self.close()
 
 
-def open_archive(source, prefetch_workers: int = 2,
-                 verify: bool = True) -> StoreArchive:
-    """Open a container from a path or an already-constructed ByteStore.
+def is_url(source: str) -> bool:
+    return source.startswith(("http://", "https://"))
 
-    With a path, the manifest is parsed from the file head and segment reads
-    go through a mmap'd FileByteStore.  With a ByteStore (e.g. a
-    RemoteByteStore wrapping one), the container header is read *through*
-    the store, so header/manifest transfer is accounted like any other read.
+
+def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
+                 blob_resolver: Optional[Callable[[str], ByteStore]] = None,
+                 cache: Optional[SegmentCache] = None) -> StoreArchive:
+    """Open a container — single-file, sharded, local, or over HTTP.
+
+    ``source`` may be:
+
+      * a ``.prs`` file path — manifest parsed from the file head, segment
+        reads through a mmap'd FileByteStore;
+      * a directory (or explicit ``manifest.json`` path) — sharded archive;
+        blobs default to FileByteStores next to the manifest;
+      * an ``http(s)://`` URL — of a ``manifest.json`` (sharded; blobs
+        default to HTTPByteStores resolved relative to the manifest URL) or
+        of a single ``.prs`` resource (ranged GETs through HTTPByteStore);
+      * a manifest dict — blobs come from ``blob_resolver``;
+      * an already-constructed ByteStore (e.g. a RemoteByteStore) — the
+        container header is read *through* the store, so header/manifest
+        transfer is accounted like any other read.
+
+    ``blob_resolver`` overrides the default blob lookup, letting shards mix
+    backends (some in memory, some on disk, some over HTTP).
     """
-    store = FileByteStore(source) if isinstance(source, str) else source
+    def build(manifest: dict, default: Optional[StoreSpec],
+              payload_offset: int = 0) -> StoreArchive:
+        return StoreArchive(manifest, blob_resolver or default,
+                            payload_offset=payload_offset,
+                            prefetch_workers=prefetch_workers,
+                            verify=verify, cache=cache)
+
+    if isinstance(source, dict):
+        if blob_resolver is None:
+            raise ValueError("a manifest dict needs a blob_resolver")
+        return build(source, None)
+
+    if isinstance(source, str) and is_url(source):
+        # detect on the parsed path, not the raw string — signed /
+        # parameterized URLs carry query strings after the filename
+        if urllib.parse.urlsplit(source).path.endswith(".json"):
+            with HTTPByteStore(source) as ms:
+                manifest = json.loads(ms.read_all().decode("utf-8"))
+            # blob sizes are recorded in the manifest, so shard stores skip
+            # their HEAD probe entirely (one GET per first-touched shard)
+            blob_sizes = manifest.get("blobs", {})
+            return build(manifest, lambda blob: HTTPByteStore(
+                urllib.parse.urljoin(source, blob),
+                size=blob_sizes.get(blob)))
+        source = HTTPByteStore(source)
+
+    if isinstance(source, str):
+        if os.path.isdir(source) or source.endswith(".json"):
+            mpath = source if source.endswith(".json") \
+                else os.path.join(source, MANIFEST_NAME)
+            with open(mpath, "rb") as fh:
+                manifest = json.loads(fh.read().decode("utf-8"))
+            root = os.path.dirname(os.path.abspath(mpath))
+            return build(manifest, lambda blob: FileByteStore(
+                os.path.join(root, blob)))
+        source = FileByteStore(source)
+
+    # single-blob container: parse the header through the store itself
+    store = source
     head = store.read(0, len(MAGIC) + 8)
     if head[:len(MAGIC)] != MAGIC:
         store.close()
         raise ValueError("bad magic: not a PRSTORE container")
     (mlen,) = struct.unpack("<Q", head[len(MAGIC):])
     manifest = json.loads(store.read(len(MAGIC) + 8, mlen).decode("utf-8"))
+    if blob_resolver is not None:
+        spec: StoreSpec = (lambda blob: store if blob == ""
+                           else blob_resolver(blob))
+        return StoreArchive(manifest, spec,
+                            payload_offset=len(MAGIC) + 8 + mlen,
+                            prefetch_workers=prefetch_workers,
+                            verify=verify, cache=cache)
     return StoreArchive(manifest, store,
                         payload_offset=len(MAGIC) + 8 + mlen,
-                        prefetch_workers=prefetch_workers, verify=verify)
+                        prefetch_workers=prefetch_workers, verify=verify,
+                        cache=cache)
 
 
 def memory_store_archive(archive: Archive, prefetch_workers: int = 2,
-                         verify: bool = True) -> StoreArchive:
+                         verify: bool = True, shard_by: str = "single",
+                         cache: Optional[SegmentCache] = None
+                         ) -> StoreArchive:
     """Round an in-memory Archive through the container format without
-    touching disk (tests, benchmarks)."""
-    manifest, payload = build_container(archive)
+    touching disk (tests, benchmarks).  ``shard_by`` exercises the sharded
+    manifest with one MemoryByteStore per blob."""
+    manifest, payloads = build_sharded_container(archive, shard_by=shard_by)
     manifest = json.loads(json.dumps(manifest))   # exact same path as disk
-    return StoreArchive(manifest, MemoryByteStore(payload),
-                        prefetch_workers=prefetch_workers, verify=verify)
+    stores = {blob: MemoryByteStore(data) for blob, data in payloads.items()}
+    spec: StoreSpec = stores if shard_by != "single" else stores.get(
+        "", MemoryByteStore(b""))
+    return StoreArchive(manifest, spec, prefetch_workers=prefetch_workers,
+                        verify=verify, cache=cache)

@@ -1,10 +1,18 @@
 """SegmentFetcher: checksum-verified segment delivery with async prefetch.
 
-The fetcher sits between progressive readers and a ByteStore.  Demand
-``fetch(key)`` blocks; ``prefetch(keys)`` submits background reads to a small
-thread pool so transport overlaps compute (the QoI estimator round of
-Algorithm 2 — see core/retrieval.py, which hands ``reassign_eb``'s predicted
-next-eps down here via the readers' prefetch hints).
+The fetcher sits between progressive readers and one or more ByteStores.
+Demand ``fetch(key)`` blocks; ``prefetch(keys)`` submits background reads to
+a small thread pool so transport overlaps compute (the QoI estimator round
+of Algorithm 2 — see core/retrieval.py, which hands ``reassign_eb``'s
+predicted next-eps down here via the readers' prefetch hints).
+
+Segments are addressed by ``SegmentEntry`` — ``(blob, offset, size, crc)``.
+A single-blob container maps every entry to blob ``""``; a sharded container
+(repro.store.container, format v2) routes each entry to its shard's
+ByteStore.  Stores may be handed in directly (one ByteStore, or a mapping
+``blob -> ByteStore``) or produced lazily by a resolver callable — a shard
+whose variable is never touched is never opened, so dropping a variable's
+blob from an object store only breaks sessions that ask for that variable.
 
 Every delivered segment is re-hashed (crc32c) against the manifest before the
 decoder sees it; a mismatch raises ChecksumError — a "guaranteed error bound"
@@ -12,7 +20,7 @@ computed from silently corrupted planes would be worthless.
 
 Cache discipline: segments are consumed at most once per session (plane
 fetches are a monotone prefix per group), so a completed future is *popped*
-on fetch — the cache holds only in-flight or not-yet-consumed prefetches.
+on fetch — the in-flight map holds only not-yet-consumed prefetches.
 Speculative hints the caller never follows up on would otherwise pin their
 payloads until close, so ``prefetch`` evicts the oldest completed
 *speculative* entries beyond ``max_inflight``.  Non-speculative entries
@@ -20,16 +28,27 @@ payloads until close, so ``prefetch`` evicts the oldest completed
 internal caller consumes them within a round, and evicting one would force
 a duplicate transfer, breaking the equal-bytes-moved property the transfer
 benches assert.
+
+An optional cross-session `SegmentCache` sits under all of this: verified
+bytes are inserted after their first store read, and later sessions (or a
+re-opened reader) are served from RAM — ``stats.store_reads`` counts actual
+ByteStore reads, ``stats.cache_hits`` the reads the cache absorbed.
+
+Stores whose ``prefers_batch`` attribute is true (HTTPByteStore) receive
+multi-segment submissions as one ``read_batch`` call, letting the store
+coalesce adjacent ranges into fewer wire round-trips.
 """
 from __future__ import annotations
 
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple, \
+    Union
 
 from repro.store.bytestore import ByteStore
+from repro.store.cache import SegmentCache
 from repro.store.crc import crc32c
 
 
@@ -37,22 +56,30 @@ class ChecksumError(IOError):
     """A fetched segment failed crc32c verification."""
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class SegmentEntry:
     """Manifest index entry: where a segment lives and what it must hash to."""
     offset: int
     size: int
     crc: int
+    blob: str = ""
 
 
-@dataclass
+StoreSpec = Union[ByteStore, Mapping[str, ByteStore],
+                  Callable[[str], ByteStore]]
+
+
+@dataclass(slots=True)
 class FetchStats:
-    demand_fetches: int = 0        # blocking reads served straight from store
-    pipelined_hits: int = 0        # served by fetch_many's own pipelining
-    prefetch_issued: int = 0       # *speculative* background reads submitted
-    prefetch_hits: int = 0         # demand fetches answered by a prediction
-    bytes_fetched: int = 0         # all segment bytes pulled from the store
-    demand_wait_s: float = 0.0     # time the caller spent blocked on reads
+    """Transport accounting for one fetcher."""
+    demand_fetches: int = 0    # blocking reads served straight from store
+    pipelined_hits: int = 0    # served by fetch_many's own pipelining
+    prefetch_issued: int = 0   # *speculative* background reads submitted
+    prefetch_hits: int = 0     # demand fetches answered by a prediction
+    bytes_fetched: int = 0     # segment bytes actually pulled from stores
+    demand_wait_s: float = 0.0  # time the caller spent blocked on reads
+    store_reads: int = 0       # segment reads that hit a ByteStore
+    cache_hits: int = 0        # segment reads absorbed by a SegmentCache
 
     @property
     def hit_rate(self) -> float:
@@ -66,13 +93,14 @@ class FetchStats:
 class SegmentFetcher:
     """Keyed, verified access to one archive's segments."""
 
-    def __init__(self, index: Dict[str, SegmentEntry], store: ByteStore,
+    def __init__(self, index: Dict[str, SegmentEntry], store: StoreSpec,
                  prefetch_workers: int = 2, verify: bool = True,
-                 max_inflight: int = 512):
+                 max_inflight: int = 512,
+                 cache: Optional[SegmentCache] = None):
         self.index = index
-        self.store = store
         self.verify = verify
         self.max_inflight = max_inflight
+        self.cache = cache
         self.stats = FetchStats()
         self._lock = threading.Lock()
         # key -> (future, from_hint, evictable): from_hint buckets the stats
@@ -83,19 +111,158 @@ class SegmentFetcher:
             ThreadPoolExecutor(max_workers=prefetch_workers,
                                thread_name_prefix="seg-prefetch")
             if prefetch_workers > 0 else None)
+        # blob -> ByteStore, resolved lazily so untouched shards never open;
+        # a separate lock because resolution may be slow (e.g. an HTTP HEAD)
+        # and must not block fetch()'s bookkeeping
+        self._stores_lock = threading.Lock()
+        self._stores: Dict[str, ByteStore] = {}
+        self._resolver: Optional[Callable[[str], ByteStore]] = None
+        if isinstance(store, ByteStore):
+            self._stores[""] = store
+        elif callable(store):
+            self._resolver = store
+        else:
+            self._stores.update(store)
+
+    # -- stores --------------------------------------------------------------
+
+    def _store_for(self, blob: str) -> ByteStore:
+        with self._stores_lock:
+            s = self._stores.get(blob)
+            if s is None:
+                if self._resolver is None:
+                    raise KeyError(
+                        f"no ByteStore for blob {blob!r} and no resolver")
+                s = self._resolver(blob)
+                self._stores[blob] = s
+            return s
+
+    def _peek_prefers_batch(self, blob: str) -> bool:
+        """Batching decision WITHOUT resolving the blob's store on the
+        caller's thread — prefetch is fire-and-forget, and resolution may
+        be a network round-trip.  Unresolved blobs go down the batch path
+        so resolution happens inside the pool worker (``read_batch``
+        degrades to a read loop on stores that don't override it)."""
+        with self._stores_lock:
+            s = self._stores.get(blob)
+        if s is None:
+            return self._resolver is not None
+        return bool(getattr(s, "prefers_batch", False))
+
+    @property
+    def store(self) -> ByteStore:
+        """The single-blob store (backwards-compatible accessor)."""
+        return self._store_for("")
+
+    @property
+    def stores(self) -> Dict[str, ByteStore]:
+        with self._stores_lock:
+            return dict(self._stores)
 
     # -- transport -----------------------------------------------------------
 
-    def _read_verified(self, key: str) -> bytes:
-        entry = self.index[key]
-        buf = self.store.read(entry.offset, entry.size)
+    def _verify(self, key: str, entry: SegmentEntry, buf: bytes) -> None:
+        if len(buf) != entry.size:
+            raise IOError(f"segment {key!r}: short read "
+                          f"({len(buf)} of {entry.size} bytes)")
         if self.verify and crc32c(buf) != entry.crc:
             raise ChecksumError(
                 f"segment {key!r}: crc32c mismatch "
                 f"(got {crc32c(buf):#010x}, manifest {entry.crc:#010x})")
+
+    def _cache_key(self, key: str, entry: SegmentEntry):
+        return (key, entry.crc)
+
+    def _read_verified(self, key: str) -> bytes:
+        entry = self.index[key]
+        if self.cache is not None:
+            buf = self.cache.get(self._cache_key(key, entry))
+            if buf is not None:
+                with self._lock:
+                    self.stats.cache_hits += 1
+                return buf
+        buf = self._store_for(entry.blob).read(entry.offset, entry.size)
+        self._verify(key, entry, buf)
         with self._lock:
             self.stats.bytes_fetched += entry.size
+            self.stats.store_reads += 1
+        if self.cache is not None and self.verify:
+            # a verify=False fetcher must not publish unverified bytes to a
+            # shared cache — hits skip re-hashing on the promise that every
+            # insert was checked against the manifest
+            self.cache.put(self._cache_key(key, entry), buf)
         return buf
+
+    def _read_results_many(self, keys: List[str]
+                           ) -> Dict[str, object]:
+        """Batched read of same-blob keys, letting batch-preferring stores
+        (HTTP) coalesce adjacent ranges into fewer round-trips.  Returns
+        per-key ``bytes`` or the per-key exception: a transport failure
+        fails the whole batch (every miss shares the cause), but a
+        verification failure is attributed ONLY to its own segment — the
+        other segments in the batch were delivered fine and must not be
+        poisoned with a misnamed error."""
+        out: Dict[str, object] = {}
+        misses: List[str] = []
+        for k in keys:
+            entry = self.index[k]
+            buf = (self.cache.get(self._cache_key(k, entry))
+                   if self.cache is not None else None)
+            if buf is not None:
+                out[k] = buf
+                with self._lock:
+                    self.stats.cache_hits += 1
+            else:
+                misses.append(k)
+        if not misses:
+            return out
+        blob = self.index[misses[0]].blob
+        try:
+            store = self._store_for(blob)
+            bufs = store.read_batch([(self.index[k].offset,
+                                      self.index[k].size) for k in misses])
+        except BaseException as e:          # transport-level: whole batch
+            for k in misses:
+                out[k] = e
+            return out
+        ok_bytes = ok_reads = 0
+        for k, buf in zip(misses, bufs):
+            entry = self.index[k]
+            try:
+                self._verify(k, entry, buf)
+            except BaseException as e:      # this segment only
+                out[k] = e
+                continue
+            out[k] = buf
+            ok_bytes += entry.size
+            ok_reads += 1
+            if self.cache is not None and self.verify:
+                self.cache.put(self._cache_key(k, entry), buf)
+        with self._lock:
+            self.stats.bytes_fetched += ok_bytes
+            self.stats.store_reads += ok_reads
+        return out
+
+    def _run_single(self, key: str, fut: Future) -> None:
+        if not fut.set_running_or_notify_cancel():
+            return
+        try:
+            fut.set_result(self._read_verified(key))
+        except BaseException as e:        # surfaced at the consuming fetch
+            fut.set_exception(e)
+
+    def _run_batch(self, keys: List[str], futs: Dict[str, Future]) -> None:
+        live = [k for k in keys if futs[k].set_running_or_notify_cancel()]
+        try:
+            res = self._read_results_many(live)
+        except BaseException as e:          # defensive: bookkeeping bug
+            res = {k: e for k in live}
+        for k in live:
+            r = res[k]
+            if isinstance(r, BaseException):
+                futs[k].set_exception(r)
+            else:
+                futs[k].set_result(r)
 
     # -- public API ----------------------------------------------------------
 
@@ -162,10 +329,41 @@ class SegmentFetcher:
                 for k in [k for k, (f, _, ev) in self._inflight.items()
                           if ev and f.done()][:over]:
                     del self._inflight[k]
+            # register manually-fulfilled futures under the lock (so a
+            # concurrent _submit cannot double-read a key), then hand the
+            # reads to the pool outside it — store resolution may be slow
+            futs: Dict[str, Future] = {}
             for k in fresh:
-                self._inflight[k] = (self._pool.submit(self._read_verified, k),
-                                     from_hint, evictable)
+                f: Future = Future()
+                self._inflight[k] = (f, from_hint, evictable)
                 self.stats.prefetch_issued += from_hint
+                futs[k] = f
+        if not futs:
+            return
+        by_blob: Dict[str, List[str]] = {}
+        for k in futs:
+            by_blob.setdefault(self.index[k].blob, []).append(k)
+        submitted = set()
+        pool = self._pool
+        try:
+            if pool is None:
+                raise RuntimeError("fetcher closed during submission")
+            for blob, ks in by_blob.items():
+                if len(ks) > 1 and self._peek_prefers_batch(blob):
+                    ks.sort(key=lambda k: self.index[k].offset)
+                    pool.submit(self._run_batch, ks, futs)
+                    submitted.update(ks)
+                else:
+                    for k in ks:
+                        pool.submit(self._run_single, k, futs[k])
+                        submitted.add(k)
+        except RuntimeError as e:
+            # pool shut down while we were submitting (close() raced a
+            # prefetch): fail the unsubmitted futures instead of leaving
+            # them pending forever — a later fetch() must not hang
+            for k, f in futs.items():
+                if k not in submitted and f.set_running_or_notify_cancel():
+                    f.set_exception(e)
 
     def drain(self) -> None:
         """Wait for all in-flight prefetches (tests/benchmarks)."""
@@ -186,6 +384,13 @@ class SegmentFetcher:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+
+    def close_stores(self) -> None:
+        """Close every ByteStore this fetcher resolved or was handed."""
+        with self._stores_lock:
+            stores, self._stores = dict(self._stores), {}
+        for s in stores.values():
+            s.close()
 
     def __enter__(self) -> "SegmentFetcher":
         return self

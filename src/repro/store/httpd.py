@@ -1,0 +1,224 @@
+"""Stdlib archive endpoint: a ranged-GET HTTP server over container files.
+
+    PYTHONPATH=src python -m repro.store.httpd /data/archive_dir --port 8000
+    PYTHONPATH=src python -m repro.launch.serve --store http://host:8000/manifest.json
+
+Serves a directory (sharded archive: ``manifest.json`` + ``*.seg`` blobs) or
+a single ``.prs`` file with proper ``Range: bytes=a-b`` semantics — 206 +
+``Content-Range`` for satisfiable ranges, 416 for unsatisfiable ones, 200
+with the whole resource when no Range header is present — over persistent
+HTTP/1.1 connections, so `HTTPByteStore`'s connection reuse actually reuses.
+
+`ThreadingHTTPServer` gives one thread per connection: the SegmentFetcher's
+prefetch pool and demand path stream concurrently, like any real object
+store.  ``fault_injector`` lets tests inject transient failures (e.g. a 500
+on the first attempt) to exercise the client's retry/backoff path.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Optional, Tuple
+
+_RANGE_RE = re.compile(r"bytes=(\d*)-(\d*)$")
+
+
+def parse_range(header: str, size: int) -> Optional[Tuple[int, int]]:
+    """``Range`` header -> (start, end) inclusive, or None if malformed /
+    multi-range (caller falls back to the full resource).  Raises ValueError
+    for a syntactically valid but unsatisfiable range (-> 416)."""
+    m = _RANGE_RE.match(header.strip())
+    if not m:
+        return None
+    first, last = m.group(1), m.group(2)
+    if first == "" and last == "":
+        return None
+    if first == "":                      # suffix form: last N bytes
+        n = int(last)
+        if n == 0:
+            raise ValueError("empty suffix range")
+        return max(0, size - n), size - 1
+    start = int(first)
+    end = int(last) if last != "" else size - 1
+    if start >= size or end < start:
+        raise ValueError(f"unsatisfiable range {header!r} for size {size}")
+    return start, min(end, size - 1)
+
+
+class _ArchiveHandler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"       # keep-alive: client connections reuse
+    server_version = "prstore-httpd/1"
+
+    def _resolve(self) -> Optional[str]:
+        root = self.server.root          # type: ignore[attr-defined]
+        name = os.path.basename(self.path.split("?", 1)[0].rstrip("/"))
+        if os.path.isfile(root):
+            # single-file mode: any request path serves the file
+            return root
+        path = os.path.realpath(os.path.join(root, name))
+        if os.path.commonpath([path, os.path.realpath(root)]) != \
+                os.path.realpath(root) or not os.path.isfile(path):
+            return None
+        return path
+
+    def _respond(self, status: int, length: int,
+                 extra: Optional[dict] = None) -> None:
+        self.send_response(status)
+        self.send_header("Accept-Ranges", "bytes")
+        self.send_header("Content-Length", str(length))
+        for k, v in (extra or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+
+    def _serve(self, head_only: bool) -> None:
+        injector = self.server.fault_injector  # type: ignore[attr-defined]
+        if injector is not None:
+            status = injector(self)
+            if status:
+                with self.server.stats_lock:   # type: ignore[attr-defined]
+                    self.server.stats["faults"] += 1
+                self._respond(status, 0)
+                return
+        path = self._resolve()
+        if path is None:
+            self._respond(404, 0)
+            return
+        size = os.path.getsize(path)
+        rng_header = self.headers.get("Range")
+        rng = None
+        if rng_header:
+            try:
+                rng = parse_range(rng_header, size)
+            except ValueError:
+                self._respond(416, 0,
+                              {"Content-Range": f"bytes */{size}"})
+                return
+        start, end = rng if rng is not None else (0, size - 1)
+        length = end - start + 1 if size else 0
+        with self.server.stats_lock:           # type: ignore[attr-defined]
+            self.server.stats["requests"] += 1
+            self.server.stats["bytes_sent"] += 0 if head_only else length
+            if rng is not None:
+                self.server.stats["range_requests"] += 1
+        extra = ({"Content-Range": f"bytes {start}-{end}/{size}"}
+                 if rng is not None else None)
+        self._respond(206 if rng is not None else 200, length, extra)
+        if head_only or length == 0:
+            return
+        with open(path, "rb") as fh:
+            fh.seek(start)
+            remaining = length
+            while remaining:
+                chunk = fh.read(min(remaining, 1 << 20))
+                if not chunk:
+                    break
+                self.wfile.write(chunk)
+                remaining -= len(chunk)
+
+    def do_GET(self) -> None:           # noqa: N802 (http.server API)
+        self._serve(head_only=False)
+
+    def do_HEAD(self) -> None:          # noqa: N802
+        self._serve(head_only=True)
+
+    def log_message(self, fmt: str, *args) -> None:
+        if self.server.verbose:          # type: ignore[attr-defined]
+            super().log_message(fmt, *args)
+
+
+class StoreHTTPServer(ThreadingHTTPServer):
+    """Ranged-GET file server for archive containers (tests, demos, and the
+    far end of ``serve.py --store http://…``)."""
+
+    daemon_threads = True
+
+    def __init__(self, root: str, host: str = "127.0.0.1", port: int = 0,
+                 fault_injector: Optional[
+                     Callable[[BaseHTTPRequestHandler], int]] = None,
+                 verbose: bool = False):
+        super().__init__((host, port), _ArchiveHandler)
+        self.root = root
+        self.fault_injector = fault_injector
+        self.verbose = verbose
+        self.stats = {"requests": 0, "range_requests": 0, "bytes_sent": 0,
+                      "faults": 0}
+        self.stats_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        base = f"http://{host}:{port}/"
+        if os.path.isfile(self.root):
+            return base + os.path.basename(self.root)
+        return base
+
+    def url_for(self, name: str) -> str:
+        return f"http://{self.server_address[0]}:{self.server_address[1]}" \
+               f"/{name}"
+
+    def start(self) -> "StoreHTTPServer":
+        self._thread = threading.Thread(target=self.serve_forever,
+                                        name="prstore-httpd", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.shutdown()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        self.server_close()
+
+    def __enter__(self) -> "StoreHTTPServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def transient_faults(n: int, status: int = 500,
+                     match: str = "") -> Callable:
+    """Fault injector failing the first ``n`` matching requests — the shape
+    of a flaky object-store frontend; a retrying client must absorb it."""
+    remaining = [n]
+    lock = threading.Lock()
+
+    def injector(handler: BaseHTTPRequestHandler) -> int:
+        if match and match not in handler.path:
+            return 0
+        with lock:
+            if remaining[0] > 0:
+                remaining[0] -= 1
+                return status
+        return 0
+
+    return injector
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="serve an archive container (file or sharded directory) "
+                    "with HTTP range support")
+    ap.add_argument("root", help=".prs file or sharded-archive directory")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    srv = StoreHTTPServer(os.path.abspath(args.root), host=args.host,
+                          port=args.port, verbose=args.verbose)
+    print(f"[httpd] serving {args.root} at {srv.url}")
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.server_close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,7 +20,6 @@ launch/train.py checkpoints every N steps at negligible step-time cost.
 """
 from __future__ import annotations
 
-import json
 import os
 import pickle
 import queue

@@ -9,7 +9,7 @@ moments at fp32 would need ~24 GB/chip on a 256-chip v5e pod (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ sharding.py (the dry-run does exactly that). Optional hooks:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -22,7 +22,6 @@ Applied separably along each axis (tensor-product projection).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

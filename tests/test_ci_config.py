@@ -1,0 +1,161 @@
+"""CI pipeline: workflow structure (the `act`-less dry-run equivalent) and
+the bench-regression gate's comparison logic."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+try:
+    import yaml
+except ImportError:                      # pragma: no cover
+    yaml = None
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
+
+sys.path.insert(0, REPO)
+from benchmarks.check_regression import (  # noqa: E402
+    OK,
+    REGRESSION,
+    SKIPPED,
+    STALE,
+    compare,
+    format_table,
+)
+
+
+def _row(us):
+    return {"us_per_call": us, "derived": ""}
+
+
+# ------------------------------------------------------------- gate logic --
+
+
+def test_gate_passes_within_tolerance():
+    base = {"a": _row(1000.0), "b": _row(500.0)}
+    cur = {"a": _row(1400.0), "b": _row(400.0)}
+    rows, failures = compare(base, cur, tolerance=1.5)
+    assert failures == []
+    assert all(r[4] == OK for r in rows)
+
+
+def test_gate_fails_on_regression():
+    base = {"a": _row(1000.0), "b": _row(500.0)}
+    cur = {"a": _row(1600.0), "b": _row(500.0)}
+    rows, failures = compare(base, cur, tolerance=1.5)
+    assert failures == ["a"]
+    assert dict((r[0], r[4]) for r in rows) == {"a": REGRESSION, "b": OK}
+
+
+def test_gate_fails_on_artificially_inflated_baseline():
+    """An inflated baseline entry would mask future regressions up to its
+    inflation factor — the two-sided default catches it as stale."""
+    base = {"a": _row(1000.0), "b": _row(500.0)}
+    cur = {"a": _row(1000.0), "b": _row(500.0)}
+    base["a"] = _row(10_000.0)          # the artificial inflation
+    rows, failures = compare(base, cur, tolerance=1.5)
+    assert failures == ["a"]
+    assert rows[0][4] == STALE
+    # --one-sided turns the stale check off
+    _, failures = compare(base, cur, tolerance=1.5, two_sided=False)
+    assert failures == []
+
+
+def test_gate_skips_noise_floor_and_intersects_rows():
+    base = {"tiny": _row(3.0), "only_base": _row(100.0), "a": _row(100.0)}
+    cur = {"tiny": _row(9.0), "only_cur": _row(100.0), "a": _row(110.0)}
+    rows, failures = compare(base, cur, tolerance=1.5, min_us=50.0)
+    names = [r[0] for r in rows]
+    assert names == ["a", "tiny"]       # intersection only
+    assert dict((r[0], r[4]) for r in rows)["tiny"] == SKIPPED
+    assert failures == []
+    assert "tiny" in format_table(rows)
+
+
+def test_gate_prefix_filter_and_bad_tolerance():
+    base = {"store/x": _row(100.0), "kernels/y": _row(100.0)}
+    cur = {"store/x": _row(100.0), "kernels/y": _row(1000.0)}
+    _, failures = compare(base, cur, tolerance=1.5, prefixes=["store/"])
+    assert failures == []
+    with pytest.raises(ValueError):
+        compare(base, cur, tolerance=0.9)
+
+
+def test_gate_cli_fails_on_inflated_baseline(tmp_path):
+    """End-to-end CLI check: exit code 1 + printed table on drift."""
+    import json
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps({"store/x": _row(10_000.0)}))
+    cur.write_text(json.dumps({"store/x": _row(100.0)}))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--baseline", str(base), "--current", str(cur)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 1
+    assert "STALE-BASELINE" in proc.stdout
+    cur.write_text(json.dumps({"store/x": _row(11_000.0)}))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--baseline", str(base), "--current", str(cur)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0
+
+
+# ------------------------------------------------------ workflow structure --
+
+
+@pytest.mark.skipif(yaml is None, reason="pyyaml unavailable")
+def test_workflow_parses_and_has_required_jobs():
+    with open(WORKFLOW) as fh:
+        wf = yaml.safe_load(fh)
+    jobs = wf["jobs"]
+    assert set(jobs) == {"lint", "test", "bench-gate", "nightly-slow"}
+    # triggers: pushes/PRs plus the nightly schedule
+    on = wf[True] if True in wf else wf["on"]   # yaml 1.1 parses `on:` as True
+    assert "pull_request" in on and "schedule" in on
+    # the test matrix covers both supported minors with pip caching
+    matrix = jobs["test"]["strategy"]["matrix"]["python-version"]
+    assert matrix == ["3.10", "3.11"]
+    for job in jobs.values():
+        setup = [s for s in job["steps"]
+                 if "setup-python" in str(s.get("uses", ""))]
+        assert setup and setup[0]["with"].get("cache") == "pip"
+
+
+@pytest.mark.skipif(yaml is None, reason="pyyaml unavailable")
+def test_workflow_commands_are_runnable_here():
+    """Dry-run equivalent of `act`: every `run` command the workflow executes
+    against the repo must reference files/modules that exist, and the tier-1
+    invocation must match ROADMAP's contract."""
+    with open(WORKFLOW) as fh:
+        wf = yaml.safe_load(fh)
+    runs = [step["run"]
+            for job in wf["jobs"].values()
+            for step in job["steps"] if "run" in step]
+    joined = "\n".join(runs)
+    assert "PYTHONPATH=src python -m pytest -x -q" in joined
+    assert "python -m benchmarks.run --only store" in joined
+    assert "python -m benchmarks.check_regression" in joined
+    assert "--baseline BENCH_kernels.json" in joined
+    # CI must stay one-sided/loose: the committed baseline is not recorded
+    # on the runner class (two-sided 1.5x is the local invocation)
+    assert "--one-sided" in joined
+    assert os.path.exists(os.path.join(REPO, "BENCH_kernels.json"))
+    assert os.path.exists(os.path.join(REPO, "ruff.toml"))
+    # every python -m module named in the workflow resolves in this checkout
+    import importlib.util
+    for mod in ("benchmarks.run", "benchmarks.check_regression", "pytest"):
+        assert importlib.util.find_spec(mod) is not None, mod
+
+
+@pytest.mark.skipif(yaml is None, reason="pyyaml unavailable")
+def test_nightly_job_is_schedule_gated():
+    with open(WORKFLOW) as fh:
+        wf = yaml.safe_load(fh)
+    jobs = wf["jobs"]
+    assert jobs["nightly-slow"]["if"] == "github.event_name == 'schedule'"
+    for name in ("lint", "test", "bench-gate"):
+        assert "schedule" in jobs[name]["if"]
+    assert "-m slow" in jobs["nightly-slow"]["steps"][-1]["run"]

@@ -1,0 +1,366 @@
+"""HTTP transport path: ranged-GET ByteStore against an in-process server,
+retry/backoff under injected faults, read coalescing, sharded containers
+with mixed/per-shard backends, and the cross-session segment cache."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.refactor import METHODS, refactor_variables
+from repro.data.synthetic import ge_like_fields
+from repro.store import (
+    FileByteStore,
+    HTTPByteStore,
+    MemoryByteStore,
+    SegmentCache,
+    open_archive,
+    save_archive,
+    save_sharded_archive,
+)
+from repro.store.httpd import StoreHTTPServer, parse_range, transient_faults
+
+
+def _vel_fields(n=1 << 10, seed=0):
+    fields = ge_like_fields(n=n, seed=seed)
+    return {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+
+
+@pytest.fixture(scope="module")
+def vel():
+    return _vel_fields()
+
+
+@pytest.fixture(scope="module")
+def hb_archive(vel):
+    return refactor_variables(vel, method="hb")
+
+
+@pytest.fixture()
+def served_prs(hb_archive, tmp_path):
+    """A single-file container served over loopback HTTP."""
+    path = str(tmp_path / "a.prs")
+    save_archive(hb_archive, path)
+    with StoreHTTPServer(path) as srv:
+        yield srv, path
+
+
+# -------------------------------------------------------------- raw store --
+
+
+def test_http_store_range_reads(served_prs):
+    srv, path = served_prs
+    with open(path, "rb") as fh:
+        raw = fh.read()
+    with HTTPByteStore(srv.url) as hs:
+        assert hs.size == len(raw)
+        assert hs.read(0, 16) == raw[:16]
+        assert hs.read(100, 333) == raw[100:433]
+        assert hs.read(len(raw) - 5, 5) == raw[-5:]
+        assert hs.read(7, 0) == b""
+        with pytest.raises(ValueError, match="negative"):
+            hs.read(0, -1)
+        with pytest.raises(EOFError):
+            hs.read(len(raw) - 2, 5)
+
+
+def test_http_read_batch_coalesces_adjacent(served_prs):
+    srv, path = served_prs
+    with open(path, "rb") as fh:
+        raw = fh.read()
+    with HTTPByteStore(srv.url, coalesce_gap=64) as hs:
+        assert hs.size == len(raw)          # force the lazy HEAD probe
+        before = hs.stats.requests
+        got = hs.read_batch([(0, 10), (10, 20), (35, 5), (4000, 8)])
+        # first three ranges are adjacent/within-gap -> one GET; the distant
+        # one gets its own
+        assert hs.stats.requests - before == 2
+        assert hs.stats.coalesced_ranges == 2
+        assert hs.stats.wasted_bytes == 5          # the [30, 35) gap
+        assert got == [raw[0:10], raw[10:30], raw[35:40], raw[4000:4008]]
+        # call order is preserved even when offsets are unsorted
+        got = hs.read_batch([(50, 4), (0, 4), (54, 4)])
+        assert got == [raw[50:54], raw[0:4], raw[54:58]]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_http_roundtrip_bit_identical(method, vel, tmp_path):
+    """All four methods reconstruct bit-identically through HTTPByteStore
+    against an in-process HTTP server — including a transient 500 absorbed
+    by the retry path — with identical achieved bounds and accounting."""
+    arch = refactor_variables(vel, method=method)
+    path = str(tmp_path / "a.prs")
+    save_archive(arch, path)
+    mem = arch.open()
+    with StoreHTTPServer(path,
+                         fault_injector=transient_faults(1)) as srv:
+        hs = HTTPByteStore(srv.url, backoff_s=0.01)
+        with open_archive(hs) as sa:
+            st = sa.open()
+            for eps in (1e-2, 1e-5):
+                for v in vel:
+                    a, ba = mem.reconstruct(v, eps)
+                    b, bb = st.reconstruct(v, eps)
+                    np.testing.assert_array_equal(a, b)
+                    assert ba == bb
+            assert mem.bytes_retrieved == st.bytes_retrieved
+        assert hs.stats.retries >= 1            # the injected 500 was absorbed
+        assert srv.stats["faults"] >= 1
+        assert srv.stats["range_requests"] > 0  # ranged GETs, not full reads
+
+
+def test_http_store_rejects_io_after_close(served_prs):
+    srv, _ = served_prs
+    hs = HTTPByteStore(srv.url)
+    hs.read(0, 8)
+    hs.close()
+    with pytest.raises(ValueError, match="closed"):
+        hs.read(0, 8)
+    with pytest.raises(ValueError, match="closed"):
+        hs.read_batch([(0, 8)])
+
+
+def test_batched_prefetch_attributes_corruption_to_its_segment(served_prs):
+    """One corrupt segment in a coalesced HTTP batch must fail ONLY its own
+    key (with its own name in the error); batch-mates still deliver."""
+    from repro.store import ChecksumError
+    srv, _ = served_prs
+    with open_archive(HTTPByteStore(srv.url), prefetch_workers=2) as sa:
+        keys = sorted(sa.fetcher.index)[:6]
+        bad = keys[2]
+        entry = sa.fetcher.index[bad]
+        sa.fetcher.index[bad] = type(entry)(
+            offset=entry.offset, size=entry.size,
+            crc=entry.crc ^ 0xBEEF, blob=entry.blob)
+        sa.fetcher.prefetch(keys)           # one _run_batch over the blob
+        sa.fetcher.drain()
+        for k in keys:
+            if k == bad:
+                with pytest.raises(ChecksumError, match=repr(bad)):
+                    sa.fetcher.fetch(k)
+            else:
+                assert len(sa.fetcher.fetch(k)) == sa.fetcher.index[k].size
+
+
+def test_http_retry_gives_up_on_persistent_errors(served_prs):
+    srv, _ = served_prs
+    srv.fault_injector = transient_faults(10 ** 6)
+    try:
+        hs = HTTPByteStore(srv.url, max_retries=2, backoff_s=0.001)
+        with pytest.raises(IOError, match="giving up"):
+            hs.read(0, 4)
+    finally:
+        srv.fault_injector = None
+
+
+def test_http_size_is_lazy_and_manifest_fetch_is_one_get(vel, hb_archive,
+                                                         tmp_path):
+    """Opening a store never HEAD-probes when the size is already known:
+    the sharded manifest arrives in ONE plain GET, and each shard store
+    gets its size from manifest['blobs'] instead of a HEAD round-trip."""
+    d = str(tmp_path / "shards")
+    save_sharded_archive(hb_archive, d, shard_by="variable")
+    with StoreHTTPServer(d) as srv:
+        with open_archive(srv.url_for("manifest.json")) as sa:
+            sa.open().reconstruct("Vx", 1e-4)
+            n_req = srv.stats["requests"]
+            # every server request past the manifest GET was a ranged read
+            assert srv.stats["range_requests"] == n_req - 1
+
+
+def test_http_manifest_url_with_query_string(vel, hb_archive, tmp_path):
+    """Signed/parameterized manifest URLs (query after the filename) must
+    still hit the sharded-manifest branch."""
+    d = str(tmp_path / "shards")
+    save_sharded_archive(hb_archive, d, shard_by="variable")
+    mem = hb_archive.open()
+    with StoreHTTPServer(d) as srv:
+        url = srv.url_for("manifest.json") + "?X-Sig=abc123&expires=9"
+        with open_archive(url) as sa:
+            a, _ = sa.open().reconstruct("Vy", 1e-4)
+            b, _ = mem.reconstruct("Vy", 1e-4)
+            np.testing.assert_array_equal(a, b)
+
+
+def test_http_store_matches_remote_link_model(hb_archive, served_prs):
+    """The real HTTP backend and the modelled RemoteByteStore deliver the
+    same bytes for the same session; HTTP moves no more payload than the
+    link model says (it may move *fewer* requests, via coalescing)."""
+    from repro.store import RemoteByteStore
+    srv, path = served_prs
+    remote = RemoteByteStore(FileByteStore(path), latency_s=1e-6,
+                             bandwidth_bps=1e10)
+    with open_archive(remote) as ra, \
+            open_archive(HTTPByteStore(srv.url)) as ha:
+        r, h = ra.open(), ha.open()
+        for eps in (1e-2, 1e-6):
+            a, _ = r.reconstruct("Vx", eps)
+            b, _ = h.reconstruct("Vx", eps)
+            np.testing.assert_array_equal(a, b)
+        assert ra.fetcher.stats.bytes_fetched == ha.fetcher.stats.bytes_fetched
+        http_store = ha.fetcher.store
+        assert http_store.stats.requests <= remote.stats.requests
+        assert http_store.stats.bytes_moved - http_store.stats.wasted_bytes \
+            <= remote.stats.bytes_moved
+
+
+def test_parse_range_forms():
+    assert parse_range("bytes=0-9", 100) == (0, 9)
+    assert parse_range("bytes=10-", 100) == (10, 99)
+    assert parse_range("bytes=-7", 100) == (93, 99)
+    assert parse_range("bytes=0-1000", 100) == (0, 99)   # clamped
+    assert parse_range("bytes=0-0,5-9", 100) is None     # multi-range -> 200
+    with pytest.raises(ValueError):
+        parse_range("bytes=100-", 100)                   # start past EOF
+    with pytest.raises(ValueError):
+        parse_range("bytes=9-3", 100)                    # inverted
+
+
+# ------------------------------------------------------- sharded archives --
+
+
+@pytest.mark.parametrize("shard_by", ("variable", "group"))
+def test_sharded_dir_roundtrip(shard_by, vel, hb_archive, tmp_path):
+    d = str(tmp_path / "shards")
+    save_sharded_archive(hb_archive, d, shard_by=shard_by)
+    names = set(os.listdir(d))
+    assert "manifest.json" in names
+    if shard_by == "variable":
+        assert {"Vx.seg", "Vy.seg", "Vz.seg"} <= names
+    mem = hb_archive.open()
+    with open_archive(d) as sa:
+        st = sa.open()
+        for v in vel:
+            a, ba = mem.reconstruct(v, 1e-5)
+            b, bb = st.reconstruct(v, 1e-5)
+            np.testing.assert_array_equal(a, b)
+            assert ba == bb
+        assert mem.bytes_retrieved == st.bytes_retrieved
+
+
+def test_sharded_http_manifest_url(vel, hb_archive, tmp_path):
+    d = str(tmp_path / "shards")
+    save_sharded_archive(hb_archive, d, shard_by="variable")
+    mem = hb_archive.open()
+    with StoreHTTPServer(d) as srv:
+        with open_archive(srv.url_for("manifest.json")) as sa:
+            st = sa.open()
+            for v in vel:
+                a, _ = mem.reconstruct(v, 1e-4)
+                b, _ = st.reconstruct(v, 1e-4)
+                np.testing.assert_array_equal(a, b)
+        assert srv.stats["range_requests"] > 0
+
+
+def test_sharded_mixed_backends_per_shard(vel, hb_archive, tmp_path):
+    """One shard from RAM, one from a local file, one over HTTP — the
+    blob-resolver decides per shard; reconstruction is bit-identical."""
+    d = str(tmp_path / "shards")
+    save_sharded_archive(hb_archive, d, shard_by="variable")
+    with open(os.path.join(d, "Vx.seg"), "rb") as fh:
+        vx_bytes = fh.read()
+    mem = hb_archive.open()
+    with StoreHTTPServer(d) as srv:
+        def resolver(blob):
+            if blob == "Vx.seg":
+                return MemoryByteStore(vx_bytes)
+            if blob == "Vy.seg":
+                return HTTPByteStore(srv.url_for(blob))
+            return FileByteStore(os.path.join(d, blob))
+
+        with open_archive(os.path.join(d, "manifest.json"),
+                          blob_resolver=resolver) as sa:
+            st = sa.open()
+            for v in vel:
+                a, _ = mem.reconstruct(v, 1e-5)
+                b, _ = st.reconstruct(v, 1e-5)
+                np.testing.assert_array_equal(a, b)
+
+
+def test_dropped_shard_only_breaks_its_variable(vel, hb_archive, tmp_path):
+    d = str(tmp_path / "shards")
+    save_sharded_archive(hb_archive, d, shard_by="variable")
+    os.unlink(os.path.join(d, "Vz.seg"))
+    mem = hb_archive.open()
+    with open_archive(d, prefetch_workers=0) as sa:
+        st = sa.open()
+        a, _ = st.reconstruct("Vx", 1e-5)       # untouched shards still serve
+        b, _ = mem.reconstruct("Vx", 1e-5)
+        np.testing.assert_array_equal(a, b)
+        with pytest.raises(OSError):
+            st.reconstruct("Vz", 1e-5)
+
+
+# ------------------------------------------------------ cross-session cache --
+
+
+def test_cross_session_cache_drops_store_fetches(hb_archive, tmp_path):
+    """Two sequential sessions over the same variable on a served store:
+    the second session's store-level fetch count collapses — its segments
+    are served from the shared SegmentCache."""
+    path = str(tmp_path / "a.prs")
+    save_archive(hb_archive, path)
+    with StoreHTTPServer(path) as srv:
+        cache = SegmentCache(max_bytes=64 << 20)
+        with open_archive(HTTPByteStore(srv.url), cache=cache) as sa:
+            s1 = sa.open()
+            a, _ = s1.reconstruct("Vx", 1e-6)
+            reads_1 = sa.fetcher.stats.store_reads
+            assert reads_1 > 0
+            s2 = sa.open()
+            b, _ = s2.reconstruct("Vx", 1e-6)
+            reads_2 = sa.fetcher.stats.store_reads - reads_1
+            np.testing.assert_array_equal(a, b)
+            assert s1.bytes_retrieved == s2.bytes_retrieved
+            # "drops measurably": second session reads (almost) nothing from
+            # the store — everything shared comes out of the cache
+            assert reads_2 <= reads_1 // 10
+            assert sa.fetcher.stats.cache_hits > 0
+            assert cache.stats.hits >= sa.fetcher.stats.cache_hits
+
+
+def test_cache_is_shared_across_archive_opens(hb_archive, tmp_path):
+    """The cache outlives a StoreArchive: a fresh open_archive over the same
+    container (a new client process connecting to the same store) reuses it,
+    keyed by segment crc."""
+    path = str(tmp_path / "a.prs")
+    save_archive(hb_archive, path)
+    cache = SegmentCache()
+    with open_archive(path, cache=cache) as sa:
+        sa.open().reconstruct("Vy", 1e-5)
+        first_reads = sa.fetcher.stats.store_reads
+    with open_archive(path, cache=cache) as sa:
+        sa.open().reconstruct("Vy", 1e-5)
+        assert sa.fetcher.stats.store_reads <= first_reads // 10
+        assert sa.fetcher.stats.cache_hits > 0
+
+
+def test_unverified_fetcher_never_populates_shared_cache(hb_archive,
+                                                         tmp_path):
+    """verify=False trusts the transport for ITS OWN session, but must not
+    publish unverified bytes to a cache whose hits skip re-hashing."""
+    path = str(tmp_path / "a.prs")
+    save_archive(hb_archive, path)
+    cache = SegmentCache()
+    with open_archive(path, verify=False, cache=cache) as sa:
+        sa.open().reconstruct("Vx", 1e-4)
+        assert cache.stats.insertions == 0
+        assert len(cache) == 0
+    with open_archive(path, verify=True, cache=cache) as sa:
+        sa.open().reconstruct("Vx", 1e-4)
+        assert cache.stats.insertions > 0
+
+
+def test_cache_lru_eviction_bounds_memory():
+    cache = SegmentCache(max_bytes=1000)
+    for i in range(20):
+        cache.put(("k", i), bytes(100))
+    assert cache.nbytes <= 1000
+    assert len(cache) == 10
+    assert cache.stats.evictions == 10
+    assert cache.get(("k", 19)) is not None     # newest survives
+    assert cache.get(("k", 0)) is None          # oldest evicted
+    # oversized entries are refused rather than wiping the cache
+    cache.put(("big", 0), bytes(2000))
+    assert ("big", 0) not in cache
+    with pytest.raises(ValueError):
+        SegmentCache(max_bytes=0)

@@ -290,3 +290,106 @@ def test_bytestore_bounds_checking(tmp_path):
         assert fs.size == 6
         with pytest.raises(EOFError):
             fs.read(4, 4)
+
+
+def test_bytestore_rejects_negative_length(tmp_path):
+    """A negative length is a caller bug, not an EOF condition: every
+    backend must raise instead of silently returning a truncated slice."""
+    path = str(tmp_path / "f.bin")
+    with open(path, "wb") as fh:
+        fh.write(b"0123456789")
+    stores = [MemoryByteStore(b"0123456789"), FileByteStore(path),
+              RemoteByteStore(MemoryByteStore(b"0123456789"),
+                              latency_s=0.0, bandwidth_bps=1e12)]
+    try:
+        for store in stores:
+            with pytest.raises(ValueError, match="negative"):
+                store.read(2, -1)
+            with pytest.raises(ValueError, match="negative"):
+                store.read_batch([(0, 4), (2, -3)])
+            with pytest.raises(EOFError):
+                store.read(-1, 2)
+            assert store.read(4, 0) == b""
+            assert store.read_batch([(1, 3), (0, 2)]) == [b"123", b"01"]
+    finally:
+        for store in stores:
+            store.close()
+
+
+# ------------------------------------------------------ fetcher lifecycle --
+
+
+def _tiny_fetcher(tmp_path, n_segments=24, seg_size=4096, latency_s=2e-3,
+                  workers=2, **kw):
+    from repro.store import SegmentEntry, SegmentFetcher
+    rng = np.random.default_rng(3)
+    payload = rng.integers(0, 256, n_segments * seg_size,
+                           dtype=np.uint8).tobytes()
+    index = {}
+    for i in range(n_segments):
+        seg = payload[i * seg_size:(i + 1) * seg_size]
+        index[f"seg{i}"] = SegmentEntry(offset=i * seg_size, size=seg_size,
+                                        crc=crc32c(seg))
+    remote = RemoteByteStore(MemoryByteStore(payload), latency_s=latency_s,
+                             bandwidth_bps=1e9)
+    return SegmentFetcher(index, remote, prefetch_workers=workers,
+                          **kw), payload, seg_size
+
+
+def test_fetcher_close_with_outstanding_prefetches(tmp_path):
+    """close() with prefetches still in flight must complete them (no
+    leaked threads, no exceptions), and demand fetches must keep working
+    afterwards — just without a pool."""
+    fetcher, payload, seg = _tiny_fetcher(tmp_path)
+    fetcher.prefetch([f"seg{i}" for i in range(24)])
+    assert fetcher.outstanding > 0
+    fetcher.close()                      # waits for the pool, does not raise
+    assert fetcher.fetch("seg3") == payload[3 * seg:4 * seg]
+    fetcher.close()                      # idempotent
+
+
+def test_fetcher_drain_after_failed_read(tmp_path):
+    """A failed background read must not poison drain(); the error surfaces
+    on the consuming fetch, and other keys stay retrievable."""
+    fetcher, payload, seg = _tiny_fetcher(tmp_path, latency_s=0.0)
+    bad = fetcher.index["seg5"]
+    fetcher.index["seg5"] = type(bad)(offset=bad.offset, size=bad.size,
+                                      crc=bad.crc ^ 0xDEAD, blob=bad.blob)
+    fetcher.prefetch(["seg5", "seg6"])
+    fetcher.drain()                      # swallows the worker's failure
+    with pytest.raises(ChecksumError):
+        fetcher.fetch("seg5")
+    assert fetcher.fetch("seg6") == payload[6 * seg:7 * seg]
+    fetcher.close()
+
+
+def test_fetcher_concurrent_fetch_many_two_threads(tmp_path):
+    """Two threads pulling overlapping fetch_many sets through ONE shared
+    link-modelled store: both must see correct bytes, with no deadlock and
+    sane accounting."""
+    import threading
+    fetcher, payload, seg = _tiny_fetcher(tmp_path, latency_s=5e-4,
+                                          workers=3)
+    keys_a = [f"seg{i}" for i in range(0, 16)]
+    keys_b = [f"seg{i}" for i in range(8, 24)]
+    results = {}
+
+    def worker(name, keys):
+        results[name] = fetcher.fetch_many(keys)
+
+    ta = threading.Thread(target=worker, args=("a", keys_a))
+    tb = threading.Thread(target=worker, args=("b", keys_b))
+    ta.start(); tb.start()
+    ta.join(timeout=30); tb.join(timeout=30)
+    assert not ta.is_alive() and not tb.is_alive()
+    for name, keys in (("a", keys_a), ("b", keys_b)):
+        for k, buf in zip(keys, results[name]):
+            i = int(k[3:])
+            assert buf == payload[i * seg:(i + 1) * seg]
+    st = fetcher.stats
+    served = st.demand_fetches + st.pipelined_hits + st.prefetch_hits
+    assert served == len(keys_a) + len(keys_b)
+    # overlapping keys are read once per consumer at most (the store saw
+    # each key at least once, and never more than the consumption count)
+    assert 24 <= st.store_reads <= served
+    fetcher.close()
