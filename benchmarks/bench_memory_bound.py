@@ -1,0 +1,85 @@
+"""Memory-bounded retrieval bench: contribution-cache budgets.
+
+The per-variable contribution cache of `_BitplaneVarReader` is the serving
+path's RSS wall — (L+1)·n·8 bytes per variable unbounded.  These rows pin
+down what a budget costs: for budgets of 1x / 0.5x / 0.25x the full
+requirement, the bench warms a session down an eps ladder, then times the
+*warm tightening* request (the serving steady state: most planes resident,
+a few move, spilled coarse contributions must be rebuilt through
+``recompose_hb_from``).  Each row reports the peak retained
+contribution-cache bytes (the RSS proxy — asserted <= budget), the
+spill/recompute counters, and the latency ratio against the unbounded
+reader.  Outputs are asserted bit-identical to the unbounded path at every
+budget — the budget may only cost time, never accuracy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.refactor import refactor_variables
+from repro.data.synthetic import ge_like_fields
+
+_N = 1 << 15
+_VARS = ("Vx", "Vy")
+_WARM_LADDER = (1e-2, 1e-3, 1e-4, 1e-5)
+_TIGHTEN_EPS = 1e-6
+_REPEAT = 3          # fresh warmed session per repeat; report the min
+
+
+def _warm_session(arch, budget):
+    s = arch.open(contrib_budget_bytes=budget)
+    for eps in _WARM_LADDER:
+        for v in _VARS:
+            s.reconstruct(v, eps)
+    return s
+
+
+def _tighten(session):
+    out = {}
+    for v in _VARS:
+        out[v] = session.reconstruct(v, _TIGHTEN_EPS)[0]
+    return out
+
+
+def run():
+    rows = []
+    fields = {k: v for k, v in ge_like_fields(n=_N, seed=0).items()
+              if k in _VARS}
+    arch = refactor_variables(fields, method="hb")
+    full_bytes = max(
+        (var.levels + 1) * int(np.prod(var.padded_shape)) * 8
+        for var in arch.variables.values())
+
+    # unbounded reference: warm ladder, then the timed tightening request
+    dt_ref, ref_vals = None, None
+    for _ in range(_REPEAT):
+        s = _warm_session(arch, None)
+        dt, vals = timed(_tighten, s)
+        if dt_ref is None or dt < dt_ref:
+            dt_ref, ref_vals = dt, vals
+    rows.append(("membound/warm_tighten/unbounded", dt_ref * 1e6,
+                 f"full_bytes={full_bytes}"))
+
+    for frac in (1.0, 0.5, 0.25):
+        budget = int(frac * full_bytes)
+        dt_b, stats = None, None
+        for _ in range(_REPEAT):
+            s = _warm_session(arch, budget)
+            dt, vals = timed(_tighten, s)
+            for v in _VARS:       # budget may cost time, never accuracy
+                assert np.array_equal(vals[v], ref_vals[v]), \
+                    f"budget={budget} not bit-identical on {v}"
+            st = s.contrib_stats()
+            assert st.contrib_peak_bytes <= len(_VARS) * budget, \
+                f"peak {st.contrib_peak_bytes} over budget {budget}/var"
+            if dt_b is None or dt < dt_b:
+                dt_b, stats = dt, st
+        rows.append((
+            f"membound/warm_tighten/budget={frac:.2f}x", dt_b * 1e6,
+            f"peak_bytes={stats.contrib_peak_bytes};"
+            f"budget_per_var={budget};"
+            f"spills={stats.contrib_spills};"
+            f"recomputes={stats.contrib_recomputes};"
+            f"vs_unbounded={dt_b / max(dt_ref, 1e-9):.2f}x"))
+    return rows

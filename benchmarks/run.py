@@ -14,6 +14,8 @@ Paper mapping:
                                           + real store/WAN prefetch overlap
   bench_store                (impl)       container round-trip, fetch latency,
                                           prefetch hit rate, crc32c
+  bench_memory_bound         (impl)       contribution-cache budgets: peak
+                                          bytes + warm latency at 1/.5/.25x
   bench_kernels              (impl)       kernel hot-loop micro-benches
   bench_training_integration (beyond)     progressive ckpt + grad compression
 Roofline/dry-run tables are built by benchmarks/roofline.py from
@@ -31,6 +33,7 @@ MODULES = [
     "bench_refactor_time",
     "bench_transfer",
     "bench_store",
+    "bench_memory_bound",
     "bench_kernels",
     "bench_training_integration",
 ]

@@ -5,10 +5,19 @@ paper itself deploys).
 Defaults follow §V/§VI: PMGARD-HB refactoring, 48 magnitude bitplanes,
 c=1.5 tightening, zero-velocity outlier masks, and the PSZ3 ladders
 ε_i = range · 10^-i used for the comparison baselines.
+
+Beyond-paper serving knobs (memory-bounded retrieval, see
+docs/architecture.md): ``contrib_budget_bytes`` caps each bitplane
+reader's retained per-level contribution fields (None = unbounded —
+the paper's assumption that full-precision state fits in RAM);
+``segment_cache_bytes`` / ``cache_depth_weight`` / ``archive_floor_bytes``
+shape the cross-session segment cache's depth-weighted eviction and
+per-archive isolation (repro.store.cache).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -21,6 +30,22 @@ class PipelineConfig:
     snapshot_base: float = 10.0         # ε_i = range · base^-i
     max_iters: int = 100
     tight_estimators: bool = False      # beyond-paper exact-sup √ bound
+    # memory-bounded retrieval (beyond paper):
+    contrib_budget_bytes: Optional[int] = None  # per-variable reader budget
+    segment_cache_bytes: int = 256 << 20        # cross-session cache total
+    cache_depth_weight: float = 64.0            # MSB-over-LSB eviction bias
+    archive_floor_bytes: int = 0                # per-archive residency floor
+
+    def server_kwargs(self) -> dict:
+        """The memory knobs as `repro.launch.serve.RetrievalServer` kwargs —
+        `RetrievalServer(fields, **cfg.server_kwargs())`.  Kept in one place
+        so the config fields and the server signature cannot drift apart
+        (asserted in tests/test_memory_bound.py)."""
+        return {"method": self.method,
+                "cache_bytes": self.segment_cache_bytes,
+                "cache_depth_weight": self.cache_depth_weight,
+                "archive_floor_bytes": self.archive_floor_bytes,
+                "contrib_budget_bytes": self.contrib_budget_bytes}
 
 
 def config() -> PipelineConfig:
@@ -29,3 +54,15 @@ def config() -> PipelineConfig:
 
 def reduced_config() -> PipelineConfig:
     return PipelineConfig(nbits=32, n_snapshots=4, max_iters=20)
+
+
+def memory_bounded_config(contrib_budget_bytes: int = 32 << 20,
+                          segment_cache_bytes: int = 64 << 20,
+                          archive_floor_bytes: int = 8 << 20
+                          ) -> PipelineConfig:
+    """A serving profile for many concurrent sessions/variables per host:
+    coarse contribution fields spill (bit-identical recompute on touch) and
+    the segment cache keeps shared MSB prefixes while isolating archives."""
+    return PipelineConfig(contrib_budget_bytes=contrib_budget_bytes,
+                          segment_cache_bytes=segment_cache_bytes,
+                          archive_floor_bytes=archive_floor_bytes)

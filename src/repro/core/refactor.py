@@ -31,6 +31,28 @@ values, and the codec's integer arithmetic makes decoded values depend
 only on the final plane counts, *any* fetch schedule ending in the same
 plane counts yields a bit-identical reconstruction — asserted against
 from-scratch sessions in tests/test_incremental_recompose.py.
+
+Bounded contribution cache (memory-budgeted retrieval)
+------------------------------------------------------
+Unbounded, the contribution cache holds one full-grid f64 field per
+coefficient group — (L+1)·n·8 bytes per variable — which becomes the
+server's scaling wall long before the segment bytes do.  Passing
+``contrib_budget_bytes`` to ``open_reader`` / ``RetrievalSession`` /
+``Archive.open`` caps the *retained* cache: the reader keeps at most
+``budget // (n·8)`` contribution fields resident, finest levels first
+(level 0 is the hottest — size-weighted budgets give it the most planes
+in flight, and its rebuild skips every interpolation step but the last),
+and spills the coarsest fields.  A spilled contribution is transparently
+rebuilt through ``recompose_hb_from`` on the next refresh that needs it;
+because contributions are pure functions of decoded values and the
+summation order is fixed (coarse -> fine), a bounded reader reconstructs
+*bit-identically* to an unbounded one at every requested eps — a zero
+budget simply degrades to recompute-always.  The refresh streams the sum
+(compute one contribution, add, then retain or drop it), so transient
+working memory is two fields regardless of budget.  Spill/recompute/
+residency counters land in ``ContribStats`` — store-backed readers share
+their fetcher's ``FetchStats``, which carries the same fields (see
+repro.store.fetcher).
 """
 from __future__ import annotations
 
@@ -61,6 +83,40 @@ from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
 METHODS = ("hb", "ob", "psz3", "psz3_delta")
 
 
+@dataclass
+class ContribStats:
+    """Contribution-cache accounting for one (or more) bitplane readers.
+
+    Field names deliberately match the ``contrib_*`` counters on
+    ``repro.store.fetcher.FetchStats`` so a store-backed reader can bump its
+    fetcher's stats object directly and a server sees one aggregate:
+
+      * ``contrib_resident_bytes`` — contribution fields currently retained.
+      * ``contrib_peak_bytes``     — high-water mark of the above (the
+        RSS-proxy the memory-bound bench tracks; transient working fields
+        during a refresh are not counted — they are bounded by two fields).
+      * ``contrib_spills``         — contribution fields computed for a
+        refresh and then dropped instead of retained (budget pressure);
+        each may have to be rebuilt by a later refresh.
+      * ``contrib_recomputes``     — budget-induced rebuilds: refreshes of a
+        level whose plane count had NOT moved (an unbounded reader would
+        have served it from cache).
+    """
+    contrib_resident_bytes: int = 0
+    contrib_peak_bytes: int = 0
+    contrib_spills: int = 0
+    contrib_recomputes: int = 0
+
+    def merge(self, other) -> "ContribStats":
+        """Accumulate another carrier of the ``contrib_*`` counters
+        (another ContribStats, or a store fetcher's FetchStats)."""
+        self.contrib_resident_bytes += other.contrib_resident_bytes
+        self.contrib_peak_bytes += other.contrib_peak_bytes
+        self.contrib_spills += other.contrib_spills
+        self.contrib_recomputes += other.contrib_recomputes
+        return self
+
+
 # ---------------------------------------------------------------------------
 # Per-variable archives
 # ---------------------------------------------------------------------------
@@ -85,8 +141,10 @@ class BitplaneVarArchive:
         surface shared with store-backed variables (repro.store)."""
         return [InMemoryPlaneSource(g) for g in self.groups]
 
-    def open_reader(self) -> "_BitplaneVarReader":
-        return _BitplaneVarReader(self)
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None
+                    ) -> "_BitplaneVarReader":
+        return _BitplaneVarReader(self,
+                                  contrib_budget_bytes=contrib_budget_bytes)
 
 
 @dataclass
@@ -97,7 +155,11 @@ class SnapshotVarArchive:
     def total_nbytes(self) -> int:
         return self.archive.total_nbytes
 
-    def open_reader(self) -> "_SnapshotVarReader":
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None
+                    ) -> "_SnapshotVarReader":
+        # snapshot readers hold at most one decoded field; the contribution
+        # budget is a bitplane-reader concept and is accepted for interface
+        # uniformity only
         return _SnapshotVarReader(self)
 
 
@@ -116,8 +178,9 @@ class Archive:
         n += sum(m.nbytes for m in self.masks.values())
         return n
 
-    def open(self) -> "RetrievalSession":
-        return RetrievalSession(self)
+    def open(self, contrib_budget_bytes: Optional[int] = None
+             ) -> "RetrievalSession":
+        return RetrievalSession(self, contrib_budget_bytes=contrib_budget_bytes)
 
     def n_elements(self, name: str) -> int:
         return int(np.prod(self.shapes[name]))
@@ -183,9 +246,19 @@ class _BitplaneVarReader:
     """Progressive reader over a bitplane variable — in-memory
     `BitplaneVarArchive` or store-backed `repro.store.StoreBitplaneVar`
     (same surface: method/shapes/levels/groups/group_indices/plane_sources);
-    planes arrive through each group's PlaneSource."""
+    planes arrive through each group's PlaneSource.
 
-    def __init__(self, var):
+    ``contrib_budget_bytes`` bounds the retained HB contribution cache (see
+    module docstring): None keeps every level resident (the classic path);
+    any other value keeps the ``budget // field_nbytes`` finest levels and
+    spills the rest, rebuilding them on demand — bit-identical outputs at
+    any budget, including zero.  ``contrib_stats`` is an optional external
+    sink carrying the ``contrib_*`` counters (store-backed readers pass
+    their fetcher's FetchStats so several readers aggregate into one view).
+    """
+
+    def __init__(self, var, contrib_budget_bytes: Optional[int] = None,
+                 contrib_stats=None):
         self.var = var
         self.streams = [LevelStream(src) for src in var.plane_sources()]
         self._recon: Optional[np.ndarray] = None
@@ -196,6 +269,26 @@ class _BitplaneVarReader:
         ngroups = var.levels + 1
         self._contribs: List[Optional[np.ndarray]] = [None] * ngroups
         self._contrib_fetched: List[int] = [-1] * ngroups
+        self._field_nbytes = int(np.prod(var.padded_shape)) * 8
+        self.contrib_stats = contrib_stats if contrib_stats is not None \
+            else ContribStats()
+        if contrib_budget_bytes is None:
+            self._resident_cap = ngroups
+        else:
+            self._resident_cap = min(
+                ngroups, max(0, int(contrib_budget_bytes)) //
+                self._field_nbytes)
+
+    @property
+    def contrib_resident_levels(self) -> List[int]:
+        """Levels whose contribution field is currently retained."""
+        return [l for l, c in enumerate(self._contribs) if c is not None]
+
+    def _note_resident(self, delta_fields: int) -> None:
+        st = self.contrib_stats
+        st.contrib_resident_bytes += delta_fields * self._field_nbytes
+        if st.contrib_resident_bytes > st.contrib_peak_bytes:
+            st.contrib_peak_bytes = st.contrib_resident_bytes
 
     def reconstruct_at_resolution(self, coarsen: int,
                                   eps: float) -> Tuple[np.ndarray, float]:
@@ -279,31 +372,67 @@ class _BitplaneVarReader:
         for s, budget in zip(self.streams, self._budgets(eps)):
             s.prefetch_to_eps(budget, certain=certain)
 
+    def _compute_contrib(self, l: int) -> np.ndarray:
+        """Contribution of group ``l``: its decoded values scattered onto the
+        padded grid, partially recomposed from its own level down.  A pure
+        function of the level's decoded values — bitwise reproducible."""
+        shape = self.var.padded_shape
+        levels = self.var.levels
+        flat = np.zeros(int(np.prod(shape)), dtype=np.float64)
+        flat[self.var.group_indices[l]] = self.streams[l].values()
+        start = min(l, levels - 1)       # base group (index L) needs all steps
+        return np.asarray(recompose_hb_from(flat.reshape(shape), levels,
+                                            start))
+
     def _refresh_hb_incremental(self) -> None:
         """HB linearity: recompute only the per-level contributions whose
         plane counts moved (partial recompose from that level down), then
         re-sum in a fixed coarse->fine order.  Contributions are pure
         functions of each level's decoded values, so any fetch schedule
-        ending at the same plane counts reconstructs bit-identically."""
-        shape = self.var.padded_shape
+        ending at the same plane counts reconstructs bit-identically.
+
+        Under a contribution budget the sum is *streamed*: each level's
+        field is produced (from cache, or rebuilt if spilled/moved), added
+        into the running total in the same fixed order, then retained only
+        if the level sits inside the resident set — the finest
+        ``_resident_cap`` levels.  The streamed path performs the exact same
+        additions in the exact same order as the unbounded path, so outputs
+        are bit-identical at any budget."""
         levels = self.var.levels
-        n = int(np.prod(shape))
-        dirty = [l for l in range(levels + 1)
-                 if self._contribs[l] is None
-                 or self._contrib_fetched[l] != self.streams[l].fetched]
-        for l in dirty:
-            flat = np.zeros(n, dtype=np.float64)
-            flat[self.var.group_indices[l]] = self.streams[l].values()
-            start = min(l, levels - 1)   # base group (index L) needs all steps
-            self._contribs[l] = np.asarray(
-                recompose_hb_from(flat.reshape(shape), levels, start))
-            self._contrib_fetched[l] = self.streams[l].fetched
-        if dirty or self._recon is None:
-            total = np.zeros(shape, dtype=np.float64)
-            for l in range(levels, -1, -1):       # fixed summation order
-                total += self._contribs[l]
-            self._recon = unpad(total, self.var.orig_shape)
-            self._dirty = False
+        stale = [self._contrib_fetched[l] != self.streams[l].fetched
+                 for l in range(levels + 1)]
+        # the early-out keys on plane counts, not residency: a repeat request
+        # at an already-satisfied eps serves the cached reconstruction even
+        # at budget 0 (where no contribution is ever retained)
+        if not any(stale) and self._recon is not None:
+            return
+        st = self.contrib_stats
+        total = np.zeros(self.var.padded_shape, dtype=np.float64)
+        for l in range(levels, -1, -1):       # fixed summation order
+            c = self._contribs[l]
+            if c is None or stale[l]:
+                if c is None and not stale[l]:
+                    # planes did not move — an unbounded reader would have a
+                    # cached field here; this rebuild is pure budget cost
+                    st.contrib_recomputes += 1
+                c = self._compute_contrib(l)
+                self._contrib_fetched[l] = self.streams[l].fetched
+            total += c
+            # resident policy: keep the finest levels (low l), spill coarse
+            if l < self._resident_cap:
+                if self._contribs[l] is None:
+                    self._note_resident(+1)
+                self._contribs[l] = c
+            else:
+                # computed for this refresh, dropped instead of retained —
+                # the next refresh that finds this level stale-free will
+                # charge a contrib_recompute to rebuild it
+                if self._contribs[l] is not None:   # defensive: cap is static
+                    self._note_resident(-1)
+                    self._contribs[l] = None
+                st.contrib_spills += 1
+        self._recon = unpad(total, self.var.orig_shape)
+        self._dirty = False
 
     def _refresh_full(self) -> None:
         """OB path: the L² corrections couple levels, so reconstruction is
@@ -334,14 +463,20 @@ class _SnapshotVarReader:
 class RetrievalSession:
     """Progressive, stateful reader over all variables of an Archive (the
     in-memory `Archive` or a store-backed `repro.store.StoreArchive` — every
-    variable builds its own reader via ``open_reader``)."""
+    variable builds its own reader via ``open_reader``).
 
-    def __init__(self, archive):
+    ``contrib_budget_bytes`` is a *per-variable* cap on each bitplane
+    reader's retained contribution cache (None = unbounded); see the module
+    docstring for the spill/recompute semantics."""
+
+    def __init__(self, archive, contrib_budget_bytes: Optional[int] = None):
         self.archive = archive
+        self.contrib_budget_bytes = contrib_budget_bytes
         self.readers: Dict[str, object] = {}
         self._mask_charged: Dict[str, bool] = {}
         for name, var in archive.variables.items():
-            self.readers[name] = var.open_reader()
+            self.readers[name] = var.open_reader(
+                contrib_budget_bytes=contrib_budget_bytes)
             self._mask_charged[name] = False
         self._mask_bytes = 0
         # How many reassign_eb reduction steps ahead the retrieval loop may
@@ -354,6 +489,21 @@ class RetrievalSession:
     def bytes_retrieved(self) -> int:
         return sum(r.bytes_fetched for r in self.readers.values()) \
             + self._mask_bytes
+
+    def contrib_stats(self) -> ContribStats:
+        """Aggregate contribution-cache counters over this session's bitplane
+        readers.  Distinct sink objects are summed once — store-backed
+        readers all share their fetcher's FetchStats, so the aggregate never
+        double-counts (note that shared sink also carries other sessions of
+        the same archive)."""
+        agg = ContribStats()
+        seen = set()
+        for r in self.readers.values():
+            st = getattr(r, "contrib_stats", None)
+            if st is not None and id(st) not in seen:
+                seen.add(id(st))
+                agg.merge(st)
+        return agg
 
     def prefetch(self, name: str, eps: float, certain: bool = True) -> None:
         """Non-binding hint that ``reconstruct(name, eps)`` is coming —

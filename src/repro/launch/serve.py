@@ -33,7 +33,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import ge
-from repro.core.refactor import refactor_variables
+from repro.core.refactor import ContribStats, refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
 from repro.store import (SegmentCache, open_archive, save_archive,
@@ -49,12 +49,21 @@ class Request:
 
 
 class RetrievalServer:
+    """``contrib_budget_bytes`` caps each session's per-variable contribution
+    cache (None = unbounded); ``cache_depth_weight`` / ``archive_floor_bytes``
+    tune the cross-session SegmentCache's depth-weighted eviction and
+    per-archive working-set floor (see repro.store.cache)."""
+
     def __init__(self, fields, method: str = "hb",
                  store_path: Optional[str] = None,
                  shard_by: Optional[str] = None,
-                 cache_bytes: int = 256 << 20):
+                 cache_bytes: int = 256 << 20,
+                 cache_depth_weight: float = 64.0,
+                 archive_floor_bytes: int = 0,
+                 contrib_budget_bytes: Optional[int] = None):
         t0 = time.time()
         self.cache: Optional[SegmentCache] = None
+        self.contrib_budget_bytes = contrib_budget_bytes
         if store_path is not None:
             if not is_url(store_path) and not os.path.exists(store_path):
                 if shard_by:
@@ -64,7 +73,9 @@ class RetrievalServer:
                 else:
                     save_archive(refactor_variables(fields, method=method),
                                  store_path)
-            self.cache = SegmentCache(max_bytes=cache_bytes)
+            self.cache = SegmentCache(max_bytes=cache_bytes,
+                                      depth_weight=cache_depth_weight,
+                                      archive_floor_bytes=archive_floor_bytes)
             self.archive = open_archive(store_path, cache=self.cache)
             shapes = {k: np.asarray(v).shape for k, v in fields.items()}
             if self.archive.method != method or self.archive.shapes != shapes:
@@ -82,7 +93,8 @@ class RetrievalServer:
 
     def handle(self, req: Request):
         if req.client not in self.sessions:
-            self.sessions[req.client] = self.archive.open()
+            self.sessions[req.client] = self.archive.open(
+                contrib_budget_bytes=self.contrib_budget_bytes)
         session = self.sessions[req.client]
         before = session.bytes_retrieved
         reqs = [QoIRequest(q, self.qois[q], req.tau) for q in req.qois]
@@ -111,12 +123,29 @@ def main(argv=None) -> int:
                          "group) instead of a single file")
     ap.add_argument("--cache-mb", type=int, default=256,
                     help="cross-session segment cache budget (MiB)")
+    ap.add_argument("--cache-depth-weight", type=float, default=64.0,
+                    help="segment-cache eviction bias: recency ticks an MSB "
+                         "plane out-lives an LSB plane, per plane of depth "
+                         "(0 = plain byte-LRU)")
+    ap.add_argument("--archive-floor-mb", type=int, default=0,
+                    help="per-archive residency floor (MiB) a hot archive "
+                         "cannot evict another archive below")
+    ap.add_argument("--contrib-mb", type=float, default=None,
+                    help="per-variable contribution-cache budget (MiB) for "
+                         "each session's bitplane readers; coarse-level "
+                         "fields spill and are recomputed on demand "
+                         "(default: unbounded)")
     args = ap.parse_args(argv)
 
     fields = ge_like_fields(n=args.n, seed=0)
+    contrib_budget = None if args.contrib_mb is None \
+        else int(args.contrib_mb * (1 << 20))
     server = RetrievalServer(fields, method=args.method,
                              store_path=args.store, shard_by=args.shard_by,
-                             cache_bytes=args.cache_mb << 20)
+                             cache_bytes=args.cache_mb << 20,
+                             cache_depth_weight=args.cache_depth_weight,
+                             archive_floor_bytes=args.archive_floor_mb << 20,
+                             contrib_budget_bytes=contrib_budget)
     src = f"store {args.store}" if args.store else "in-memory archive"
     print(f"[server] {src} ready for {args.n} pts x5 vars in "
           f"{server.refactor_s:.2f}s "
@@ -152,7 +181,21 @@ def main(argv=None) -> int:
             print(f"[server] cache: {st.cache_hits} segment reads served "
                   f"from RAM ({cs.hits} hits / {cs.misses} misses, "
                   f"{server.cache.nbytes / 2**20:.2f} MiB resident, "
-                  f"{cs.evictions} evicted)")
+                  f"{cs.evictions} evicted, "
+                  f"{cs.floor_protected} floor-protected)")
+    if args.contrib_mb is not None:
+        if args.store:
+            cst = server.archive.fetcher.stats
+        else:                       # in-memory sessions: one sink per reader
+            cst = ContribStats()
+            for s in server.sessions.values():
+                cst.merge(s.contrib_stats())
+        print(f"[server] contrib cache: "
+              f"{cst.contrib_resident_bytes / 2**20:.2f} MiB resident "
+              f"(peak {cst.contrib_peak_bytes / 2**20:.2f} MiB), "
+              f"{cst.contrib_spills} spills, "
+              f"{cst.contrib_recomputes} recomputes")
+    if args.store:
         server.archive.close()
     return 0
 

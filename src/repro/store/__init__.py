@@ -26,10 +26,12 @@ from repro.store.container import (
     StoreSnapshotVar,
     build_container,
     build_sharded_container,
+    manifest_archive_id,
     memory_store_archive,
     open_archive,
     save_archive,
     save_sharded_archive,
+    segment_depth,
 )
 from repro.store.crc import crc32c
 from repro.store.fetcher import (
@@ -47,5 +49,6 @@ __all__ = [
     "build_container", "build_sharded_container",
     "save_archive", "save_sharded_archive",
     "open_archive", "memory_store_archive",
+    "segment_depth", "manifest_archive_id",
     "crc32c", "SegmentFetcher", "SegmentEntry", "FetchStats", "ChecksumError",
 ]

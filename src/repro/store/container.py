@@ -42,6 +42,7 @@ import json
 import os
 import struct
 import urllib.parse
+import zlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -74,6 +75,25 @@ FORMAT_VERSION = 2
 MANIFEST_NAME = "manifest.json"
 
 SHARD_POLICIES = ("single", "variable", "group")
+
+
+def segment_depth(key: str) -> int:
+    """Progressive depth of a segment key — cache-eviction metadata.
+
+    Bitplane segments ``V/g<l>/p<b>`` map to their plane index ``b`` (0 =
+    MSB, consumed by every client; large = LSB, consumed by few).  Snapshot
+    blobs ``V/s<i>/b<j>`` map to the snapshot index ``i`` (ladder position:
+    later snapshots serve only tight tolerances).  Sign planes, masks and
+    anything unrecognised map to 0 — they ride with the first plane and are
+    as shared as the MSB prefix."""
+    parts = key.split("/")
+    last = parts[-1]
+    if last[:1] == "p" and last[1:].isdigit():
+        return int(last[1:])
+    if len(parts) == 3 and parts[1][:1] == "s" and parts[1][1:].isdigit() \
+            and last[:1] == "b":
+        return int(parts[1][1:])
+    return 0
 
 
 def _shard_of(key: str, shard_by: str) -> str:
@@ -305,8 +325,13 @@ class StoreBitplaneVar:
         return [FetcherPlaneSource(self._fetcher, f"{self.name}/g{l}", meta)
                 for l, meta in enumerate(self.groups)]
 
-    def open_reader(self) -> _BitplaneVarReader:
-        return _BitplaneVarReader(self)
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None
+                    ) -> _BitplaneVarReader:
+        # the fetcher's FetchStats doubles as the ContribStats sink so one
+        # object reports transport traffic AND reader residency/spills
+        return _BitplaneVarReader(self,
+                                  contrib_budget_bytes=contrib_budget_bytes,
+                                  contrib_stats=self._fetcher.stats)
 
 
 class _SnapshotHandle:
@@ -392,7 +417,9 @@ class StoreSnapshotVar:
     def total_nbytes(self) -> int:
         return sum(h.nbytes for h in self.snapshots)
 
-    def open_reader(self):
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None):
+        # contribution budgets are bitplane-reader state; accepted for
+        # interface uniformity with the other variable kinds
         cls = _StoreDeltaSnapshotReader if self.delta else _StoreSnapshotReader
         return cls(self)
 
@@ -447,11 +474,14 @@ StoreSpec = Union[ByteStore, Dict[str, ByteStore],
                   Callable[[str], ByteStore]]
 
 
-def _parse_segment_index(manifest: dict, payload_offset: int
+def _parse_segment_index(manifest: dict, payload_offset: int,
+                         with_depth: bool = True
                          ) -> Dict[str, SegmentEntry]:
     """v2 entries are (blob, offset, size, crc); v1 are (offset, size, crc)
     with an implicit single blob ``""``.  ``payload_offset`` shifts only the
-    single-file blob (whose payload follows the in-file manifest)."""
+    single-file blob (whose payload follows the in-file manifest).
+    ``with_depth=False`` skips the per-key depth parse — depth is cache
+    eviction metadata, dead weight on a cache-less open."""
     index: Dict[str, SegmentEntry] = {}
     for key, entry in manifest["segments"].items():
         if len(entry) == 4:
@@ -460,8 +490,18 @@ def _parse_segment_index(manifest: dict, payload_offset: int
             blob, (off, size, crc) = "", entry
         index[key] = SegmentEntry(
             offset=off + (payload_offset if blob == "" else 0),
-            size=size, crc=crc, blob=blob)
+            size=size, crc=crc, blob=blob,
+            depth=segment_depth(key) if with_depth else 0)
     return index
+
+
+def manifest_archive_id(manifest: dict) -> str:
+    """Stable id grouping one archive's cache entries for per-archive
+    budgets: a hash of the canonical manifest JSON, so every session over
+    the same container (local, re-opened, or remote) lands in the same
+    budget group while distinct archives never collide on id *and* crc."""
+    blob = json.dumps(manifest, sort_keys=True).encode("utf-8")
+    return f"prs-{zlib.crc32(blob):08x}-{len(blob)}"
 
 
 class StoreArchive:
@@ -475,13 +515,17 @@ class StoreArchive:
 
     ``cache`` is an optional cross-session `SegmentCache`: sessions opened
     from this archive (or any archive sharing the cache object) serve
-    repeat segment reads from RAM instead of the backing store.
+    repeat segment reads from RAM instead of the backing store.  Entries
+    are tagged with this archive's ``archive_id`` (derived from the
+    manifest unless overridden) and each segment's plane depth, so a shared
+    cache can evict depth-weighted and hold per-archive floors/caps.
     """
 
     def __init__(self, manifest: dict, store: StoreSpec,
                  payload_offset: int = 0, prefetch_workers: int = 2,
                  verify: bool = True,
-                 cache: Optional[SegmentCache] = None):
+                 cache: Optional[SegmentCache] = None,
+                 archive_id: Optional[str] = None):
         if manifest.get("format") != "prstore":
             raise ValueError("not a prstore manifest")
         if manifest.get("version", 0) > FORMAT_VERSION:
@@ -492,10 +536,18 @@ class StoreArchive:
         self.ranges: Dict[str, float] = dict(manifest["ranges"])
         self.shapes: Dict[str, Tuple[int, ...]] = {
             k: tuple(v) for k, v in manifest["shapes"].items()}
-        index = _parse_segment_index(manifest, payload_offset)
+        # the id only matters as a cache grouping key, and hashing a big
+        # manifest costs ~ms per open — derive it eagerly only when a cache
+        # will consume it (the property below derives on demand otherwise)
+        if archive_id is None and cache is not None:
+            archive_id = manifest_archive_id(manifest)
+        self._archive_id = archive_id
+        index = _parse_segment_index(manifest, payload_offset,
+                                     with_depth=cache is not None)
         self.fetcher = SegmentFetcher(index, store,
                                       prefetch_workers=prefetch_workers,
-                                      verify=verify, cache=cache)
+                                      verify=verify, cache=cache,
+                                      archive_id=archive_id or "")
         self.masks = _LazyMasks(manifest["masks"], self.fetcher)
         self.variables: Dict[str, object] = {}
         for name, spec in manifest["variables"].items():
@@ -505,6 +557,12 @@ class StoreArchive:
             else:
                 self.variables[name] = StoreSnapshotVar(name, spec,
                                                         self.fetcher)
+
+    @property
+    def archive_id(self) -> str:
+        if self._archive_id is None:
+            self._archive_id = manifest_archive_id(self.manifest)
+        return self._archive_id
 
     @property
     def cache(self) -> Optional[SegmentCache]:
@@ -517,8 +575,10 @@ class StoreArchive:
     def n_elements(self, name: str) -> int:
         return int(np.prod(self.shapes[name]))
 
-    def open(self, prefetch_depth: int = 1) -> RetrievalSession:
-        session = RetrievalSession(self)
+    def open(self, prefetch_depth: int = 1,
+             contrib_budget_bytes: Optional[int] = None) -> RetrievalSession:
+        session = RetrievalSession(self,
+                                   contrib_budget_bytes=contrib_budget_bytes)
         session.prefetch_depth = prefetch_depth
         return session
 
@@ -539,7 +599,8 @@ def is_url(source: str) -> bool:
 
 def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
                  blob_resolver: Optional[Callable[[str], ByteStore]] = None,
-                 cache: Optional[SegmentCache] = None) -> StoreArchive:
+                 cache: Optional[SegmentCache] = None,
+                 archive_id: Optional[str] = None) -> StoreArchive:
     """Open a container — single-file, sharded, local, or over HTTP.
 
     ``source`` may be:
@@ -558,13 +619,17 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
 
     ``blob_resolver`` overrides the default blob lookup, letting shards mix
     backends (some in memory, some on disk, some over HTTP).
+
+    ``archive_id`` overrides the cache budget-group id (default: a hash of
+    the manifest — see ``manifest_archive_id``).
     """
     def build(manifest: dict, default: Optional[StoreSpec],
               payload_offset: int = 0) -> StoreArchive:
         return StoreArchive(manifest, blob_resolver or default,
                             payload_offset=payload_offset,
                             prefetch_workers=prefetch_workers,
-                            verify=verify, cache=cache)
+                            verify=verify, cache=cache,
+                            archive_id=archive_id)
 
     if isinstance(source, dict):
         if blob_resolver is None:
@@ -610,17 +675,18 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
         return StoreArchive(manifest, spec,
                             payload_offset=len(MAGIC) + 8 + mlen,
                             prefetch_workers=prefetch_workers,
-                            verify=verify, cache=cache)
+                            verify=verify, cache=cache,
+                            archive_id=archive_id)
     return StoreArchive(manifest, store,
                         payload_offset=len(MAGIC) + 8 + mlen,
                         prefetch_workers=prefetch_workers, verify=verify,
-                        cache=cache)
+                        cache=cache, archive_id=archive_id)
 
 
 def memory_store_archive(archive: Archive, prefetch_workers: int = 2,
                          verify: bool = True, shard_by: str = "single",
-                         cache: Optional[SegmentCache] = None
-                         ) -> StoreArchive:
+                         cache: Optional[SegmentCache] = None,
+                         archive_id: Optional[str] = None) -> StoreArchive:
     """Round an in-memory Archive through the container format without
     touching disk (tests, benchmarks).  ``shard_by`` exercises the sharded
     manifest with one MemoryByteStore per blob."""
@@ -630,4 +696,4 @@ def memory_store_archive(archive: Archive, prefetch_workers: int = 2,
     spec: StoreSpec = stores if shard_by != "single" else stores.get(
         "", MemoryByteStore(b""))
     return StoreArchive(manifest, spec, prefetch_workers=prefetch_workers,
-                        verify=verify, cache=cache)
+                        verify=verify, cache=cache, archive_id=archive_id)

@@ -32,7 +32,19 @@ benches assert.
 An optional cross-session `SegmentCache` sits under all of this: verified
 bytes are inserted after their first store read, and later sessions (or a
 re-opened reader) are served from RAM — ``stats.store_reads`` counts actual
-ByteStore reads, ``stats.cache_hits`` the reads the cache absorbed.
+ByteStore reads, ``stats.cache_hits`` the reads the cache absorbed.  Cache
+insertions carry each segment's *plane depth* (``SegmentEntry.depth`` — the
+bitplane index, parsed from the manifest key by ``container.segment_depth``)
+and this fetcher's ``archive_id`` so the cache can evict depth-weighted
+(shared MSB prefixes out-live rarely-shared LSB tails) and enforce
+per-archive floors/caps — see repro.store.cache.
+
+``FetchStats`` also aggregates the *contribution-cache* counters
+(``contrib_resident_bytes`` / ``contrib_peak_bytes`` / ``contrib_spills`` /
+``contrib_recomputes``): every store-backed `_BitplaneVarReader` opened over
+this fetcher uses ``stats`` as its ContribStats sink, so one object reports
+both transport traffic and reader memory behaviour under a budget (see
+core/refactor.py for the exact counter semantics).
 
 Stores whose ``prefers_batch`` attribute is true (HTTPByteStore) receive
 multi-segment submissions as one ``read_batch`` call, letting the store
@@ -58,11 +70,16 @@ class ChecksumError(IOError):
 
 @dataclass(frozen=True, slots=True)
 class SegmentEntry:
-    """Manifest index entry: where a segment lives and what it must hash to."""
+    """Manifest index entry: where a segment lives and what it must hash to.
+
+    ``depth`` is the segment's progressive depth (bitplane index / snapshot
+    index; 0 for signs, masks and other always-needed segments) — cache
+    eviction metadata, not addressing."""
     offset: int
     size: int
     crc: int
     blob: str = ""
+    depth: int = 0
 
 
 StoreSpec = Union[ByteStore, Mapping[str, ByteStore],
@@ -80,6 +97,12 @@ class FetchStats:
     demand_wait_s: float = 0.0  # time the caller spent blocked on reads
     store_reads: int = 0       # segment reads that hit a ByteStore
     cache_hits: int = 0        # segment reads absorbed by a SegmentCache
+    # contribution-cache counters (ContribStats sink for store-backed
+    # bitplane readers — see core/refactor.py for exact semantics):
+    contrib_resident_bytes: int = 0  # contribution fields currently retained
+    contrib_peak_bytes: int = 0      # high-water mark of the above
+    contrib_spills: int = 0          # fields computed then dropped (budget)
+    contrib_recomputes: int = 0      # budget-induced rebuilds of unmoved levels
 
     @property
     def hit_rate(self) -> float:
@@ -96,11 +119,13 @@ class SegmentFetcher:
     def __init__(self, index: Dict[str, SegmentEntry], store: StoreSpec,
                  prefetch_workers: int = 2, verify: bool = True,
                  max_inflight: int = 512,
-                 cache: Optional[SegmentCache] = None):
+                 cache: Optional[SegmentCache] = None,
+                 archive_id: str = ""):
         self.index = index
         self.verify = verify
         self.max_inflight = max_inflight
         self.cache = cache
+        self.archive_id = archive_id
         self.stats = FetchStats()
         self._lock = threading.Lock()
         # key -> (future, from_hint, evictable): from_hint buckets the stats
@@ -190,7 +215,8 @@ class SegmentFetcher:
             # a verify=False fetcher must not publish unverified bytes to a
             # shared cache — hits skip re-hashing on the promise that every
             # insert was checked against the manifest
-            self.cache.put(self._cache_key(key, entry), buf)
+            self.cache.put(self._cache_key(key, entry), buf,
+                           depth=entry.depth, archive=self.archive_id)
         return buf
 
     def _read_results_many(self, keys: List[str]
@@ -237,7 +263,8 @@ class SegmentFetcher:
             ok_bytes += entry.size
             ok_reads += 1
             if self.cache is not None and self.verify:
-                self.cache.put(self._cache_key(k, entry), buf)
+                self.cache.put(self._cache_key(k, entry), buf,
+                               depth=entry.depth, archive=self.archive_id)
         with self._lock:
             self.stats.bytes_fetched += ok_bytes
             self.stats.store_reads += ok_reads

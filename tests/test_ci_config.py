@@ -1,5 +1,5 @@
-"""CI pipeline: workflow structure (the `act`-less dry-run equivalent) and
-the bench-regression gate's comparison logic."""
+"""CI pipeline: workflow structure (the `act`-less dry-run equivalent), the
+bench-regression gate's comparison logic, and the docs link checker."""
 import os
 import subprocess
 import sys
@@ -22,6 +22,12 @@ from benchmarks.check_regression import (  # noqa: E402
     STALE,
     compare,
     format_table,
+)
+from tools.check_links import (  # noqa: E402
+    check_file,
+    collect_markdown,
+    iter_links,
+    slugify,
 )
 
 
@@ -103,6 +109,77 @@ def test_gate_cli_fails_on_inflated_baseline(tmp_path):
     assert proc.returncode == 0
 
 
+# ------------------------------------------------------- docs link checker --
+
+
+def test_slugify_matches_github_anchors():
+    assert slugify("Quickstart") == "quickstart"
+    assert slugify("5. Memory budgets (bounded retrieval)") == \
+        "5-memory-budgets-bounded-retrieval"
+    assert slugify("Store format: containers, manifests, segments") == \
+        "store-format-containers-manifests-segments"
+    assert slugify("`code` in a heading") == "code-in-a-heading"
+
+
+def test_iter_links_skips_code_blocks():
+    text = ("see [a](x.md) here\n"
+            "```\n[not](a-link.md)\n```\n"
+            "inline `[also not](skipped.md)` but [b](y.md#sec)\n")
+    assert [t for _, t in iter_links(text)] == ["x.md", "y.md#sec"]
+
+
+def test_check_file_reports_broken_and_passes_good(tmp_path):
+    good = tmp_path / "good.md"
+    good.write_text("# A Section\n\nlink [self](#a-section) and "
+                    "[other](other.md#real-heading) and "
+                    "[ext](https://example.com/404)\n")
+    (tmp_path / "other.md").write_text("# Real heading\n")
+    assert check_file(str(good)) == []
+    bad = tmp_path / "bad.md"
+    bad.write_text("[gone](missing.md)\n[anchor](other.md#nope)\n")
+    errors = check_file(str(bad))
+    assert len(errors) == 2
+    assert "missing.md" in errors[0] and "#nope" in errors[1]
+
+
+def test_collect_markdown_walks_directories(tmp_path):
+    (tmp_path / "sub").mkdir()
+    (tmp_path / "a.md").write_text("x")
+    (tmp_path / "sub" / "b.md").write_text("x")
+    (tmp_path / "sub" / "c.txt").write_text("x")
+    found = collect_markdown([str(tmp_path)])
+    assert [os.path.basename(f) for f in found] == ["a.md", "b.md"]
+
+
+def test_check_links_cli_on_this_repo_and_on_breakage(tmp_path):
+    """The committed README + docs must pass, and the CLI must exit 1 with
+    a pointed report when a link breaks."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.check_links", "README.md", "docs"],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 broken link(s)" in proc.stdout
+    bad = tmp_path / "bad.md"
+    bad.write_text("[dead](nowhere.md)\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.check_links", str(bad)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 1
+    assert "bad.md:1" in proc.stdout and "nowhere.md" in proc.stdout
+
+
+def test_docs_guides_exist_and_are_linked_from_readme():
+    """The docs tree is the contract: three guides, all reachable from the
+    README."""
+    for name in ("architecture.md", "store-format.md",
+                 "qoi-error-control.md"):
+        assert os.path.exists(os.path.join(REPO, "docs", name)), name
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as fh:
+        targets = {t.split("#")[0] for _, t in iter_links(fh.read())}
+    assert {"docs/architecture.md", "docs/store-format.md",
+            "docs/qoi-error-control.md"} <= targets
+
+
 # ------------------------------------------------------ workflow structure --
 
 
@@ -111,7 +188,7 @@ def test_workflow_parses_and_has_required_jobs():
     with open(WORKFLOW) as fh:
         wf = yaml.safe_load(fh)
     jobs = wf["jobs"]
-    assert set(jobs) == {"lint", "test", "bench-gate", "nightly-slow"}
+    assert set(jobs) == {"lint", "docs", "test", "bench-gate", "nightly-slow"}
     # triggers: pushes/PRs plus the nightly schedule
     on = wf[True] if True in wf else wf["on"]   # yaml 1.1 parses `on:` as True
     assert "pull_request" in on and "schedule" in on
@@ -121,7 +198,12 @@ def test_workflow_parses_and_has_required_jobs():
     for job in jobs.values():
         setup = [s for s in job["steps"]
                  if "setup-python" in str(s.get("uses", ""))]
-        assert setup and setup[0]["with"].get("cache") == "pip"
+        assert setup
+        # jobs that install deps must cache pip; dep-less jobs (docs link
+        # check is stdlib-only) must NOT pay the cache save/restore
+        installs = any("pip install" in s.get("run", "")
+                       for s in job["steps"])
+        assert (setup[0]["with"].get("cache") == "pip") == installs
 
 
 @pytest.mark.skipif(yaml is None, reason="pyyaml unavailable")
@@ -139,6 +221,7 @@ def test_workflow_commands_are_runnable_here():
     assert "python -m benchmarks.run --only store" in joined
     assert "python -m benchmarks.check_regression" in joined
     assert "--baseline BENCH_kernels.json" in joined
+    assert "python -m tools.check_links README.md docs" in joined
     # CI must stay one-sided/loose: the committed baseline is not recorded
     # on the runner class (two-sided 1.5x is the local invocation)
     assert "--one-sided" in joined
@@ -146,7 +229,8 @@ def test_workflow_commands_are_runnable_here():
     assert os.path.exists(os.path.join(REPO, "ruff.toml"))
     # every python -m module named in the workflow resolves in this checkout
     import importlib.util
-    for mod in ("benchmarks.run", "benchmarks.check_regression", "pytest"):
+    for mod in ("benchmarks.run", "benchmarks.check_regression",
+                "tools.check_links", "pytest"):
         assert importlib.util.find_spec(mod) is not None, mod
 
 
@@ -156,6 +240,6 @@ def test_nightly_job_is_schedule_gated():
         wf = yaml.safe_load(fh)
     jobs = wf["jobs"]
     assert jobs["nightly-slow"]["if"] == "github.event_name == 'schedule'"
-    for name in ("lint", "test", "bench-gate"):
+    for name in ("lint", "docs", "test", "bench-gate"):
         assert "schedule" in jobs[name]["if"]
     assert "-m slow" in jobs["nightly-slow"]["steps"][-1]["run"]

@@ -1,0 +1,306 @@
+"""Memory-bounded retrieval: contribution-cache budgets and the
+depth-weighted, archive-aware SegmentCache.
+
+The budget contract is *bit-identity*: a bounded reader may spend extra
+recompute but must reconstruct exactly what the unbounded reader does, at
+every budget including zero.  The cache contract is *isolation + skew*:
+MSB/low-depth segments out-live LSB segments at equal recency, and a hot
+archive can never evict another archive below its residency floor.
+"""
+import numpy as np
+import pytest
+
+from tests._hypothesis_shim import given, settings, strategies as st
+
+from repro.core.refactor import METHODS, refactor_variables
+from repro.data.synthetic import ge_like_fields
+from repro.store import SegmentCache, memory_store_archive, segment_depth
+from repro.store.cache import _MAX_BAND
+
+
+def _vel_fields(n=1 << 12, seed=0):
+    fields = ge_like_fields(n=n, seed=seed)
+    return {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+
+
+EPS_LADDER = (1e-1, 1e-3, 1e-5, 1e-7)
+
+
+# ----------------------------------------------- bounded reader bit-identity --
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_quarter_budget_bit_identical_all_methods(method):
+    """0.25x budget: bit-identical values AND achieved bounds for all four
+    methods, through the store-backed path (exercises the open_reader
+    budget plumbing of bitplane and snapshot variables alike)."""
+    vel = _vel_fields()
+    arch = refactor_variables(vel, method=method)
+    unbounded = arch.open()
+    if method in ("hb", "ob"):
+        full = max((var.levels + 1) * int(np.prod(var.padded_shape)) * 8
+                   for var in arch.variables.values())
+        budget = full // 4
+    else:
+        budget = 1 << 20     # snapshot readers: knob accepted, unused
+    with memory_store_archive(arch) as sa:
+        bounded = sa.open(contrib_budget_bytes=budget)
+        for eps in EPS_LADDER:
+            for v in vel:
+                a, ba = unbounded.reconstruct(v, eps)
+                b, bb = bounded.reconstruct(v, eps)
+                assert np.array_equal(a, b), (method, v, eps)
+                assert ba == bb
+
+
+def test_zero_budget_degrades_to_recompute_always():
+    """Budget 0 retains nothing — every refresh rebuilds every level — yet
+    outputs stay bit-identical and a repeat request is still served from
+    the cached reconstruction without touching the streams."""
+    vel = {"Vx": _vel_fields()["Vx"]}
+    arch = refactor_variables(vel, method="hb")
+    ref, zero = arch.open(), arch.open(contrib_budget_bytes=0)
+    for eps in EPS_LADDER:
+        a, _ = ref.reconstruct("Vx", eps)
+        b, _ = zero.reconstruct("Vx", eps)
+        assert np.array_equal(a, b)
+    st_ = zero.contrib_stats()
+    assert st_.contrib_resident_bytes == 0
+    assert st_.contrib_peak_bytes == 0
+    assert st_.contrib_spills > 0
+    # repeat at an already-satisfied eps: no stream moves, no rebuild
+    before = zero.contrib_stats()
+    zero.reconstruct("Vx", EPS_LADDER[-1])
+    assert zero.contrib_stats() == before
+
+
+def test_tiny_budget_bounds_peak_and_counts_recomputes():
+    """Peak retained bytes never exceed the budget; a refresh where only
+    one level moved charges budget-induced recomputes for the spilled,
+    unmoved levels (an unbounded reader would have served them cached)."""
+    vel = {"Vx": _vel_fields()["Vx"]}
+    arch = refactor_variables(vel, method="hb")
+    var = arch.variables["Vx"]
+    field = int(np.prod(var.padded_shape)) * 8
+    session = arch.open(contrib_budget_bytes=2 * field)
+    for eps in EPS_LADDER:
+        session.reconstruct("Vx", eps)
+    reader = session.readers["Vx"]
+    st_ = session.contrib_stats()
+    assert st_.contrib_peak_bytes <= 2 * field
+    assert st_.contrib_resident_bytes == 2 * field
+    assert reader.contrib_resident_levels == [0, 1]    # finest stay resident
+    # move ONE coarse stream by hand, then re-request the same eps: the
+    # moved level is stale, the other spilled levels are pure recompute
+    before = st_.contrib_recomputes
+    base = var.levels
+    reader.streams[base].fetch_to_planes(reader.streams[base].fetched + 1)
+    session.reconstruct("Vx", EPS_LADDER[-1])
+    after = session.contrib_stats().contrib_recomputes
+    assert after - before == var.levels - 2   # all spilled but the moved one
+
+
+def test_budget_full_requirement_never_spills():
+    vel = {"Vx": _vel_fields()["Vx"]}
+    arch = refactor_variables(vel, method="hb")
+    var = arch.variables["Vx"]
+    full = (var.levels + 1) * int(np.prod(var.padded_shape)) * 8
+    session = arch.open(contrib_budget_bytes=full)
+    for eps in EPS_LADDER:
+        session.reconstruct("Vx", eps)
+    st_ = session.contrib_stats()
+    assert st_.contrib_spills == 0 and st_.contrib_recomputes == 0
+    assert st_.contrib_peak_bytes == full
+
+
+def test_store_backed_counters_land_in_fetch_stats():
+    """Store-backed readers sink their ContribStats into the fetcher's
+    FetchStats, so the serving layer reads transport and residency off one
+    object."""
+    arch = refactor_variables(_vel_fields(), method="hb")
+    with memory_store_archive(arch) as sa:
+        session = sa.open(contrib_budget_bytes=0)
+        for v in ("Vx", "Vy"):
+            session.reconstruct(v, 1e-4)
+        assert sa.fetcher.stats.contrib_spills > 0
+        assert sa.fetcher.stats.contrib_resident_bytes == 0
+        assert session.contrib_stats().contrib_spills == \
+            sa.fetcher.stats.contrib_spills     # one shared sink, counted once
+
+
+def test_resolution_progression_unaffected_by_budget():
+    vel = {"Vx": _vel_fields()["Vx"]}
+    arch = refactor_variables(vel, method="hb")
+    a, ba = arch.open().reconstruct_at_resolution("Vx", 2, 1e-4)
+    b, bb = arch.open(contrib_budget_bytes=0) \
+        .reconstruct_at_resolution("Vx", 2, 1e-4)
+    assert np.array_equal(a, b) and ba == bb
+
+
+def test_pipeline_config_server_kwargs_match_server_signature():
+    """The config's memory knobs must stay constructible into a
+    RetrievalServer — catches field/signature drift."""
+    import inspect
+
+    from repro.configs.progressive_retrieval import memory_bounded_config
+    from repro.launch.serve import RetrievalServer
+
+    kwargs = memory_bounded_config().server_kwargs()
+    params = inspect.signature(RetrievalServer.__init__).parameters
+    assert set(kwargs) <= set(params) - {"self"}
+
+
+def test_link_checker_disambiguates_duplicate_headings(tmp_path):
+    from tools.check_links import check_file, headings
+    doc = tmp_path / "dup.md"
+    doc.write_text("# Example\n\ntext\n\n# Example\n\n"
+                   "[first](#example) [second](#example-1) "
+                   "[gone](#example-2)\n")
+    assert headings(str(doc)) == ["example", "example-1"]
+    errors = check_file(str(doc))
+    assert len(errors) == 1 and "#example-2" in errors[0]
+
+
+# ---------------------------------------------------------- segment depth --
+
+
+def test_segment_depth_parsing():
+    assert segment_depth("Vx/g0/p0") == 0
+    assert segment_depth("Vx/g3/p17") == 17
+    assert segment_depth("Vx/g2/signs") == 0
+    assert segment_depth("Vx/s4/b1") == 4
+    assert segment_depth("Vx/mask/bitmap") == 0
+    assert segment_depth("Vx/mask/values") == 0
+
+
+# ----------------------------------------------- depth-weighted eviction --
+
+
+def test_plain_lru_when_depth_weight_zero():
+    """depth_weight=0 recovers byte-LRU exactly (the legacy contract)."""
+    cache = SegmentCache(max_bytes=1000, depth_weight=0.0)
+    for i in range(20):
+        cache.put(("k", i), bytes(100), depth=i % 7)
+    assert cache.nbytes <= 1000
+    assert len(cache) == 10
+    assert cache.stats.evictions == 10
+    assert all((("k", i) in cache) == (i >= 10) for i in range(20))
+
+
+def test_msb_outlives_lsb_at_equal_recency():
+    """Older MSB entries survive newer LSB entries once the weighted age
+    difference exceeds depth_weight * depth."""
+    cache = SegmentCache(max_bytes=1000, depth_weight=100.0)
+    for i in range(10):
+        cache.put(("msb", i), bytes(100), depth=0)
+    for i in range(5):
+        cache.put(("lsb", i), bytes(100), depth=40)
+    assert all(("msb", i) in cache for i in range(10))
+    assert not any(("lsb", i) in cache for i in range(5))
+
+
+def test_get_refreshes_recency():
+    cache = SegmentCache(max_bytes=300, depth_weight=0.0)
+    cache.put("a", bytes(100))
+    cache.put("b", bytes(100))
+    cache.put("c", bytes(100))
+    assert cache.get("a") is not None      # a is now the most recent
+    cache.put("d", bytes(100))             # evicts b, not a
+    assert "a" in cache and "b" not in cache
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_depth_weighted_eviction_dominance_property(data):
+    """No surviving entry is strictly dominated by an evicted one: if s was
+    inserted no later than e AND sits at least as deep, s's score is <= e's
+    score, so min-score eviction must have taken s first.  Holds for any
+    weight, any depth mix, any sizes (single archive, put-only workload,
+    unique keys — ticks equal insertion order)."""
+    weight = data.draw(st.floats(min_value=0.0, max_value=64.0))
+    n = data.draw(st.integers(min_value=4, max_value=40))
+    cache = SegmentCache(max_bytes=600, depth_weight=weight)
+    log = []
+    for i in range(n):
+        depth = data.draw(st.integers(min_value=0, max_value=_MAX_BAND))
+        size = data.draw(st.integers(min_value=1, max_value=200))
+        cache.put(i, bytes(size), depth=depth)
+        log.append((i, depth))             # tick == i + 1 (puts only)
+    survivors = [(i, d) for i, d in log if i in cache]
+    evicted = [(i, d) for i, d in log if i not in cache]
+    for ei, ed in evicted:
+        for si, sd in survivors:
+            if si < ei:                     # s already present at eviction
+                s_score = (si + 1) - weight * sd
+                e_score = (ei + 1) - weight * ed
+                assert s_score >= e_score, (
+                    f"survivor {si}(d={sd}) strictly better victim than "
+                    f"evicted {ei}(d={ed}) at weight {weight}")
+
+
+# --------------------------------------------------------- archive budgets --
+
+
+def test_hot_archive_cannot_evict_other_below_floor():
+    cache = SegmentCache(max_bytes=1000, depth_weight=0.0,
+                         archive_floor_bytes=300)
+    for i in range(3):
+        cache.put(("B", i), bytes(100), archive="B")
+    for i in range(50):                     # hot archive hammers the cache
+        cache.put(("A", i), bytes(100), archive="A")
+    assert cache.archive_nbytes("B") == 300
+    assert cache.archive_nbytes("A") == 700
+    assert cache.stats.floor_protected > 0
+
+
+def test_archive_may_evict_itself_below_floor():
+    """Floors protect against *other* archives' pressure only: an archive
+    whose own insertions overflow the cache evicts its own entries."""
+    cache = SegmentCache(max_bytes=500, depth_weight=0.0,
+                         archive_floor_bytes=400)
+    for i in range(10):
+        cache.put(("A", i), bytes(100), archive="A")
+    assert cache.archive_nbytes("A") == 500
+    assert cache.stats.evictions == 5
+
+
+def test_archive_max_bytes_caps_one_archive():
+    cache = SegmentCache(max_bytes=10_000, archive_max_bytes=300)
+    for i in range(10):
+        cache.put(("A", i), bytes(100), archive="A")
+    cache.put(("B", 0), bytes(100), archive="B")
+    assert cache.archive_nbytes("A") == 300
+    assert cache.archive_nbytes("B") == 100
+    assert cache.nbytes == 400
+
+
+def test_floor_never_breaks_global_bound():
+    """Floors are protection, not reservation: with every archive at its
+    floor the global byte bound still holds (self-eviction)."""
+    cache = SegmentCache(max_bytes=400, depth_weight=0.0,
+                         archive_floor_bytes=400)
+    for a in ("A", "B", "C"):
+        for i in range(3):
+            cache.put((a, i), bytes(100), archive=a)
+    assert cache.nbytes <= 400
+
+
+def test_distinct_archives_isolated_through_fetcher():
+    """Two archives sharing one cache get distinct derived ids, and the
+    floor keeps the first archive's working set resident while the second
+    floods the cache."""
+    f1 = {"Vx": _vel_fields(seed=1)["Vx"]}
+    f2 = {"Vy": _vel_fields(n=1 << 13, seed=2)["Vy"]}
+    a1 = refactor_variables(f1, method="hb")
+    a2 = refactor_variables(f2, method="hb")
+    floor = 4 << 10
+    cache = SegmentCache(max_bytes=48 << 10, depth_weight=0.0,
+                         archive_floor_bytes=floor)
+    with memory_store_archive(a1, cache=cache) as s1, \
+            memory_store_archive(a2, cache=cache) as s2:
+        assert s1.archive_id != s2.archive_id
+        s1.open().reconstruct("Vx", 1e-6)
+        assert cache.archive_nbytes(s1.archive_id) > floor
+        s2.open().reconstruct("Vy", 1e-12)  # flood from the second archive
+        assert cache.stats.evictions > 0
+        assert cache.archive_nbytes(s1.archive_id) >= floor

@@ -1,0 +1,147 @@
+"""Internal-link checker for the markdown docs (CI's docs job).
+
+Scans markdown files for inline links/images ``[text](target)`` and fails
+on any *internal* target that does not resolve:
+
+  * relative file targets must exist on disk (resolved against the linking
+    file's directory);
+  * ``target.md#anchor`` (and same-file ``#anchor``) targets must name a
+    heading whose GitHub slug matches the anchor;
+  * ``http(s)://`` / ``mailto:`` targets are skipped — CI must not depend
+    on the network.
+
+Fenced code blocks and inline code spans are stripped before scanning so
+example snippets never false-positive.
+
+Usage (what `.github/workflows/ci.yml` runs)::
+
+    python -m tools.check_links README.md docs
+
+Directories are scanned recursively for ``*.md``.  Exit code 1 lists every
+broken link as ``file:line: message``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from typing import List, Tuple
+
+# inline [text](target) / ![alt](target); target ends at the first ')' or
+# space (markdown titles — [t](file "title") — keep only the path part)
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces to hyphens, drop everything
+    but word chars/hyphens (backticks and punctuation vanish)."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _strip_code(lines: List[str]) -> List[str]:
+    """Blank out fenced code blocks and inline code spans, preserving line
+    numbering so reports point at the real line."""
+    out: List[str] = []
+    in_fence = False
+    for line in lines:
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else re.sub(r"`[^`]*`", "", line))
+    return out
+
+
+def iter_links(text: str) -> List[Tuple[int, str]]:
+    """(1-based line number, raw target) for every inline link."""
+    links: List[Tuple[int, str]] = []
+    for i, line in enumerate(_strip_code(text.splitlines()), start=1):
+        for m in _LINK_RE.finditer(line):
+            links.append((i, m.group(1)))
+    return links
+
+
+def headings(path: str) -> List[str]:
+    """Anchor slugs of every heading, with GitHub's duplicate
+    disambiguation: repeated headings get ``-1``, ``-2``, ... suffixes."""
+    with open(path, encoding="utf-8") as fh:
+        lines = _strip_code(fh.read().splitlines())
+    slugs: List[str] = []
+    seen: dict = {}
+    for line in lines:
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = seen.get(slug)
+        seen[slug] = 0 if n is None else n + 1
+        slugs.append(slug if n is None else f"{slug}-{n + 1}")
+    return slugs
+
+
+def check_file(path: str) -> List[str]:
+    """Broken-link report for one markdown file (empty = clean)."""
+    errors: List[str] = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    for lineno, target in iter_links(text):
+        if target.startswith(_EXTERNAL):
+            continue
+        fragment = None
+        if "#" in target:
+            target, fragment = target.split("#", 1)
+        dest = os.path.abspath(path) if target == "" \
+            else os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(dest):
+            errors.append(f"{path}:{lineno}: broken link -> {target}")
+            continue
+        if fragment and dest.endswith(".md"):
+            if slugify(fragment) not in headings(dest):
+                errors.append(f"{path}:{lineno}: missing anchor "
+                              f"#{fragment} in {target or os.path.basename(dest)}")
+    return errors
+
+
+def collect_markdown(paths: List[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                files.extend(os.path.join(root, n)
+                             for n in sorted(names) if n.endswith(".md"))
+        else:
+            files.append(p)
+    return files
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="check internal markdown links resolve")
+    ap.add_argument("paths", nargs="*", default=["README.md", "docs"],
+                    help="markdown files and/or directories "
+                         "(default: README.md docs)")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["README.md", "docs"]
+    files = collect_markdown(paths)
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    errors: List[str] = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    print(f"check_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
