@@ -14,6 +14,8 @@ Paper mapping:
                                           + real store/WAN prefetch overlap
   bench_store                (impl)       container round-trip, fetch latency,
                                           prefetch hit rate, crc32c
+  bench_entropy              (impl)       plane-codec density sweep + cost-
+                                          model selection vs zlib stand-in
   bench_memory_bound         (impl)       contribution-cache budgets: peak
                                           bytes + warm latency at 1/.5/.25x
   bench_kernels              (impl)       kernel hot-loop micro-benches
@@ -33,6 +35,7 @@ MODULES = [
     "bench_refactor_time",
     "bench_transfer",
     "bench_store",
+    "bench_entropy",
     "bench_memory_bound",
     "bench_kernels",
     "bench_training_integration",
@@ -41,7 +44,9 @@ MODULES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="run only modules whose name contains one of "
+                         "these comma-separated substrings")
     ap.add_argument("--json", default=None,
                     help="machine-readable output path ('' to disable); "
                          "defaults to BENCH_kernels.json on FULL runs only "
@@ -52,8 +57,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     results = {}
+    only = [s for s in args.only.split(",") if s]
     for name in MODULES:
-        if args.only and args.only not in name:
+        if only and not any(s in name for s in only):
             continue
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()

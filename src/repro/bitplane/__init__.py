@@ -1,3 +1,13 @@
+from repro.bitplane.codecs import (
+    CodecError,
+    PlaneCodec,
+    codec_name,
+    decode_tagged,
+    encode_tagged,
+    get_codec,
+    register,
+    registered_codecs,
+)
 from repro.bitplane.encoder import (
     LevelBitplanes,
     PlaneGroupMeta,
@@ -18,4 +28,6 @@ __all__ = [
     "LevelBitplanes", "PlaneGroupMeta", "encode_level", "decode_magnitudes",
     "accumulate_planes", "values_from_planes", "plane_bound",
     "LevelStream", "PlaneSegment", "PlaneSource", "InMemoryPlaneSource",
+    "CodecError", "PlaneCodec", "codec_name", "decode_tagged",
+    "encode_tagged", "get_codec", "register", "registered_codecs",
 ]

@@ -5,9 +5,13 @@ Per coefficient group (one multilevel level of one variable):
   * magnitudes quantised to B-bit fixed point: mag = floor(|c| · 2^{B-E});
   * plane b (0 = MSB) is bit (B-1-b) of every magnitude; 32 coefficients are
     packed into one uint32 word (bit i of word w = coefficient 32·w + i) and
-    each packed plane is zlib-compressed (stands in for the entropy stage —
-    MSB planes of smooth data are mostly zero and compress away);
-  * one packed+compressed sign plane, charged to the first fetched plane.
+    each packed plane goes through the *entropy stage* — the pluggable codec
+    registry of ``repro.bitplane.codecs``: a cost model tries run-length,
+    static rANS and zlib candidates on the packed bytes and keeps the
+    smallest, tagging the blob with a one-byte codec id (near-0.5-density
+    planes are stored raw without trying anything — they cannot compress);
+  * one sign plane, routed through the same tagged codec stage and charged
+    to the first fetched plane.
 
 Device codec architecture (§Perf)
 ---------------------------------
@@ -15,8 +19,9 @@ Plane extraction + packing is ONE batched Pallas kernel call per group
 (``kernels/bitplane_pack``); the archival ``nbits=48`` exceeds the TPU's
 32-bit vector registers, so the uint64 magnitudes are split into hi/lo
 uint32 words and packed with two kernel launches (planes 0..B-33 from the
-hi word, B-32..B-1 from the lo word).  zlib touches only the packed words —
-the scalar per-plane ``packbits`` loop of the legacy encoder is gone.
+hi word, B-32..B-1 from the lo word).  The entropy stage touches only the
+packed words — the scalar per-plane ``packbits`` loop of the legacy encoder
+is gone.
 Decoding mirrors this: ``decode_magnitudes`` inflates the newly fetched
 planes and hands them to ``kernels/ops.unpack_bitplanes``, which ORs every
 plane into the magnitude state in one vectorized op (the
@@ -35,26 +40,17 @@ module remains the host/archival container; the hot loops live in
 """
 from __future__ import annotations
 
-import zlib
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 import repro._x64  # noqa: F401  (exact f64 quantization on device)
+from repro.bitplane.codecs import decode_sign_blob, decode_tagged, \
+    encode_tagged
 from repro.kernels import ops
 
 DEFAULT_NBITS = 48  # magnitude planes; int64-safe, ~1e-14 relative floor
-
-# Entropy-stage plane tags: planes at ~maximum entropy (bit density near
-# 0.5 — the vast majority below a float field's noise floor) cannot deflate
-# and are stored raw, skipping both compress and decompress work; sparse
-# planes (MSBs of smooth data) go through zlib.  A compressed plane that
-# fails to shrink falls back to raw, so a plane never costs more than
-# 1 + 4*ceil32(count) bytes.
-_TAG_ZLIB = b"Z"
-_TAG_RAW = b"R"
-_RAW_DENSITY_BAND = (0.45, 0.55)
 
 
 def _popcounts(words: np.ndarray) -> np.ndarray:
@@ -65,19 +61,8 @@ def _popcounts(words: np.ndarray) -> np.ndarray:
                                                            dtype=np.int64)
 
 
-def _deflate_plane(words_row: np.ndarray, density: float) -> bytes:
-    buf = words_row.tobytes()
-    if _RAW_DENSITY_BAND[0] <= density <= _RAW_DENSITY_BAND[1]:
-        return _TAG_RAW + buf
-    z = zlib.compress(buf, 1)
-    return _TAG_ZLIB + z if len(z) < len(buf) else _TAG_RAW + buf
-
-
 def _inflate_plane(blob: bytes, nwords: int) -> np.ndarray:
-    payload = memoryview(blob)[1:]
-    if blob[:1] == _TAG_RAW:
-        return np.frombuffer(payload, dtype=np.uint32, count=nwords)
-    return np.frombuffer(zlib.decompress(payload), dtype=np.uint32,
+    return np.frombuffer(decode_tagged(blob, 4 * nwords), dtype=np.uint32,
                          count=nwords)
 
 
@@ -102,9 +87,9 @@ class LevelBitplanes:
     exponent: Optional[int]        # None => group is all zeros
     nbits: int
     planes: List[bytes]            # tagged packed-word planes, MSB-first:
-                                   #   b"Z" + zlib stream | b"R" + raw words
+                                   #   codec-id byte + payload (see codecs.py)
     plane_raw_bits: int            # uncompressed bits per plane (= count)
-    signs: bytes                   # zlib(packbits(c < 0))
+    signs: bytes                   # codec-tagged packbits(c < 0)
     _crcs: Optional[Tuple[Tuple[int, ...], int]] = None
 
     def plane_nbytes(self, b: int) -> int:
@@ -152,8 +137,9 @@ def encode_level(coeffs: np.ndarray, nbits: int = DEFAULT_NBITS) -> LevelBitplan
     scale = np.float64(2.0) ** (nbits - e)
     words = ops.encode_magnitude_planes(c, scale, nbits)
     density = _popcounts(words) / float(n)
-    planes = [_deflate_plane(words[b], density[b]) for b in range(nbits)]
-    signs = zlib.compress(np.packbits(c < 0).tobytes(), 1)
+    planes = [encode_tagged(words[b].tobytes(), density=float(density[b]))
+              for b in range(nbits)]
+    signs = encode_tagged(np.packbits(c < 0).tobytes())
     return LevelBitplanes(count=n, exponent=e, nbits=nbits, planes=planes,
                           plane_raw_bits=n, signs=signs)
 
@@ -203,7 +189,8 @@ def values_from_planes(count: int, exponent: Optional[int], nbits: int,
     if exponent is None:
         return np.zeros(count, dtype=np.float64)
     signs = np.unpackbits(
-        np.frombuffer(zlib.decompress(signs_blob), dtype=np.uint8),
+        np.frombuffer(decode_sign_blob(signs_blob, (count + 7) // 8),
+                      dtype=np.uint8),
         count=count).astype(bool)
     vals = mag.astype(np.float64) * np.float64(2.0) ** (exponent - nbits)
     vals[signs] *= -1.0

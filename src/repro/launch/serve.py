@@ -32,6 +32,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.bitplane import codecs as plane_codecs
 from repro.core import ge
 from repro.core.refactor import ContribStats, refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
@@ -135,7 +136,15 @@ def main(argv=None) -> int:
                          "each session's bitplane readers; coarse-level "
                          "fields spill and are recomputed on demand "
                          "(default: unbounded)")
+    ap.add_argument("--codecs", default=None, metavar="NAME[,NAME...]",
+                    help="entropy-stage candidate codecs for refactoring "
+                         "(e.g. 'zlib' pins the legacy stand-in; default: "
+                         f"{','.join(plane_codecs.DEFAULT_CANDIDATES)}; "
+                         "raw is always implied)")
     args = ap.parse_args(argv)
+    if args.codecs is not None:
+        plane_codecs.set_default_candidates(
+            n for n in args.codecs.split(",") if n)
 
     fields = ge_like_fields(n=args.n, seed=0)
     contrib_budget = None if args.contrib_mb is None \
@@ -150,6 +159,11 @@ def main(argv=None) -> int:
     print(f"[server] {src} ready for {args.n} pts x5 vars in "
           f"{server.refactor_s:.2f}s "
           f"(archive {server.archive.total_nbytes / 2**20:.2f} MiB)")
+    if args.store:
+        at_rest = server.archive.codec_bytes()
+        print("[server] archive codecs: " + ", ".join(
+            f"{name}={nb}B" for name, nb in
+            sorted(at_rest.items(), key=lambda kv: -kv[1])))
 
     rng = np.random.default_rng(0)
     clients = [f"client{i}" for i in range(4)]
@@ -176,6 +190,10 @@ def main(argv=None) -> int:
               f"{st.demand_fetches} demand / {st.pipelined_hits} pipelined / "
               f"{st.prefetch_hits} predicted (hit rate {st.hit_rate:.0%}), "
               f"blocked {st.demand_wait_s * 1e3:.1f}ms")
+        if st.codec_bytes:
+            print("[server] wire codecs: " + ", ".join(
+                f"{name}={nb}B" for name, nb in
+                sorted(st.codec_bytes.items(), key=lambda kv: -kv[1])))
         if server.cache is not None:
             cs = server.cache.stats
             print(f"[server] cache: {st.cache_hits} segment reads served "

@@ -7,7 +7,7 @@ Layout of a single-file ``.prs`` container::
     manifest JSON (utf-8)
     payload: concatenated segments
 
-A *sharded* container (format v2) is a directory (or URL prefix, or any set
+A *sharded* container (introduced with format v2) is a directory (or URL prefix, or any set
 of ByteStores) holding ``manifest.json`` plus one payload blob per shard —
 per variable (``Vx.seg``) or per level group (``Vx.g0.seg``) — so shards can
 be written in parallel, fetched from independent keys/URLs, mixed across
@@ -17,8 +17,13 @@ the rest of the archive.
 The manifest carries everything *about* the archive — method, per-variable
 group metadata (counts, exponents, nbits, per-plane sizes), snapshot ladder
 metadata, outlier-mask shapes, value ranges — plus a segment index mapping
-``key -> (blob, offset, size, crc32c)`` into the payload blobs (v1
-manifests carry ``(offset, size, crc32c)``; both parse).  The payload
+``key -> (blob, offset, size, crc32c, codec)`` into the payload blobs
+(format v3; the codec field is the plane-codec id chosen by the entropy
+stage's cost model, ``null`` for non-plane segments).  v2 manifests carry
+``(blob, offset, size, crc32c)`` and v1 manifests ``(offset, size,
+crc32c)`` with an implicit single blob — all three parse, and v1/v2 plane
+payloads (legacy ``b"R"``/``b"Z"`` tags, bare-zlib signs) decode
+bit-identically through the codec registry's legacy paths.  The payload
 carries only opaque segment bytes: one segment per bitplane, per sign
 plane, per snapshot blob, per mask bitmap / mask value array.  Offsets are
 relative to each blob's start, so payloads can be re-hosted on any
@@ -47,6 +52,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.bitplane.codecs import blob_codec_id
 from repro.bitplane.encoder import PlaneGroupMeta
 from repro.bitplane.segments import PlaneSource
 from repro.compressors.snapshots import (
@@ -71,7 +77,7 @@ from repro.store.fetcher import SegmentEntry, SegmentFetcher
 from repro.transform.hierarchical import level_map
 
 MAGIC = b"PRSTORE1"
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
 MANIFEST_NAME = "manifest.json"
 
 SHARD_POLICIES = ("single", "variable", "group")
@@ -122,7 +128,7 @@ def _shard_of(key: str, shard_by: str) -> str:
 
 
 class _SegmentWriter:
-    """Routes segments into per-shard payload blobs; builds the v2 index."""
+    """Routes segments into per-shard payload blobs; builds the v3 index."""
 
     def __init__(self, shard_by: str = "single"):
         self.shard_by = shard_by
@@ -130,13 +136,14 @@ class _SegmentWriter:
         self._chunks: Dict[str, List[bytes]] = {}
         self._offsets: Dict[str, int] = {}
 
-    def add(self, key: str, data: bytes, crc: Optional[int] = None) -> None:
+    def add(self, key: str, data: bytes, crc: Optional[int] = None,
+            codec: Optional[int] = None) -> None:
         if key in self.index:
             raise ValueError(f"duplicate segment key {key!r}")
         blob = _shard_of(key, self.shard_by)
         off = self._offsets.get(blob, 0)
         self.index[key] = [blob, off, len(data),
-                           crc32c(data) if crc is None else crc]
+                           crc32c(data) if crc is None else crc, codec]
         self._chunks.setdefault(blob, []).append(data)
         self._offsets[blob] = off + len(data)
 
@@ -151,9 +158,11 @@ def _bitplane_var_manifest(name: str, var: BitplaneVarArchive,
     for l, g in enumerate(var.groups):
         plane_crcs, sign_crc = g.segment_crcs()
         for b, blob in enumerate(g.planes):
-            w.add(f"{name}/g{l}/p{b}", blob, crc=plane_crcs[b])
+            w.add(f"{name}/g{l}/p{b}", blob, crc=plane_crcs[b],
+                  codec=blob_codec_id(blob))
         if g.exponent is not None:
-            w.add(f"{name}/g{l}/signs", g.signs, crc=sign_crc)
+            w.add(f"{name}/g{l}/signs", g.signs, crc=sign_crc,
+                  codec=blob_codec_id(g.signs))
         groups.append({"count": g.count, "exponent": g.exponent,
                        "nbits": g.nbits,
                        "plane_sizes": [len(p) for p in g.planes],
@@ -477,21 +486,27 @@ StoreSpec = Union[ByteStore, Dict[str, ByteStore],
 def _parse_segment_index(manifest: dict, payload_offset: int,
                          with_depth: bool = True
                          ) -> Dict[str, SegmentEntry]:
-    """v2 entries are (blob, offset, size, crc); v1 are (offset, size, crc)
-    with an implicit single blob ``""``.  ``payload_offset`` shifts only the
-    single-file blob (whose payload follows the in-file manifest).
-    ``with_depth=False`` skips the per-key depth parse — depth is cache
-    eviction metadata, dead weight on a cache-less open."""
+    """v3 entries are (blob, offset, size, crc, codec); v2 drop the codec
+    field; v1 are (offset, size, crc) with an implicit single blob ``""``
+    — all three parse (codec stays None on v1/v2, whose payloads are
+    self-describing through the legacy tag bytes).  ``payload_offset``
+    shifts only the single-file blob (whose payload follows the in-file
+    manifest).  ``with_depth=False`` skips the per-key depth parse — depth
+    is cache eviction metadata, dead weight on a cache-less open."""
     index: Dict[str, SegmentEntry] = {}
     for key, entry in manifest["segments"].items():
-        if len(entry) == 4:
+        codec = None
+        if len(entry) == 5:
+            blob, off, size, crc, codec = entry
+        elif len(entry) == 4:
             blob, off, size, crc = entry
         else:
             blob, (off, size, crc) = "", entry
         index[key] = SegmentEntry(
             offset=off + (payload_offset if blob == "" else 0),
             size=size, crc=crc, blob=blob,
-            depth=segment_depth(key) if with_depth else 0)
+            depth=segment_depth(key) if with_depth else 0,
+            codec=codec)
     return index
 
 
@@ -571,6 +586,18 @@ class StoreArchive:
     @property
     def total_nbytes(self) -> int:
         return sum(e.size for e in self.fetcher.index.values())
+
+    def codec_bytes(self) -> Dict[str, int]:
+        """Encoder-side codec choice: archived bytes per entropy codec,
+        straight from the manifest (no payload reads).  v1/v2 archives
+        report everything as ``untagged`` — their manifests predate the
+        codec field."""
+        from repro.bitplane.codecs import codec_name
+        out: Dict[str, int] = {}
+        for e in self.fetcher.index.values():
+            name = codec_name(e.codec)
+            out[name] = out.get(name, 0) + e.size
+        return out
 
     def n_elements(self, name: str) -> int:
         return int(np.prod(self.shapes[name]))

@@ -8,7 +8,7 @@ predicted next-eps down here via the readers' prefetch hints).
 
 Segments are addressed by ``SegmentEntry`` — ``(blob, offset, size, crc)``.
 A single-blob container maps every entry to blob ``""``; a sharded container
-(repro.store.container, format v2) routes each entry to its shard's
+(repro.store.container, format v2+) routes each entry to its shard's
 ByteStore.  Stores may be handed in directly (one ByteStore, or a mapping
 ``blob -> ByteStore``) or produced lazily by a resolver callable — a shard
 whose variable is never touched is never opened, so dropping a variable's
@@ -55,10 +55,11 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple, \
     Union
 
+from repro.bitplane.codecs import codec_name
 from repro.store.bytestore import ByteStore
 from repro.store.cache import SegmentCache
 from repro.store.crc import crc32c
@@ -74,12 +75,16 @@ class SegmentEntry:
 
     ``depth`` is the segment's progressive depth (bitplane index / snapshot
     index; 0 for signs, masks and other always-needed segments) — cache
-    eviction metadata, not addressing."""
+    eviction metadata, not addressing.  ``codec`` is the plane-codec id the
+    entropy stage chose for this segment (manifest v3; None for non-plane
+    segments and for v1/v2 archives, whose payloads are self-describing) —
+    transport accounting metadata, not decode state."""
     offset: int
     size: int
     crc: int
     blob: str = ""
     depth: int = 0
+    codec: Optional[int] = None
 
 
 StoreSpec = Union[ByteStore, Mapping[str, ByteStore],
@@ -103,6 +108,10 @@ class FetchStats:
     contrib_peak_bytes: int = 0      # high-water mark of the above
     contrib_spills: int = 0          # fields computed then dropped (budget)
     contrib_recomputes: int = 0      # budget-induced rebuilds of unmoved levels
+    # bytes pulled from stores per entropy codec (key = codec name, from the
+    # manifest v3 codec field; "untagged" covers masks/snapshots and v1/v2
+    # archives) — the on-the-wire view of the encoder's codec choices
+    codec_bytes: Dict[str, int] = field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -208,9 +217,12 @@ class SegmentFetcher:
                 return buf
         buf = self._store_for(entry.blob).read(entry.offset, entry.size)
         self._verify(key, entry, buf)
+        cname = codec_name(entry.codec)
         with self._lock:
             self.stats.bytes_fetched += entry.size
             self.stats.store_reads += 1
+            self.stats.codec_bytes[cname] = \
+                self.stats.codec_bytes.get(cname, 0) + entry.size
         if self.cache is not None and self.verify:
             # a verify=False fetcher must not publish unverified bytes to a
             # shared cache — hits skip re-hashing on the promise that every
@@ -252,6 +264,7 @@ class SegmentFetcher:
                 out[k] = e
             return out
         ok_bytes = ok_reads = 0
+        ok_codec: Dict[str, int] = {}
         for k, buf in zip(misses, bufs):
             entry = self.index[k]
             try:
@@ -262,12 +275,17 @@ class SegmentFetcher:
             out[k] = buf
             ok_bytes += entry.size
             ok_reads += 1
+            cname = codec_name(entry.codec)
+            ok_codec[cname] = ok_codec.get(cname, 0) + entry.size
             if self.cache is not None and self.verify:
                 self.cache.put(self._cache_key(k, entry), buf,
                                depth=entry.depth, archive=self.archive_id)
         with self._lock:
             self.stats.bytes_fetched += ok_bytes
             self.stats.store_reads += ok_reads
+            for cname, nb in ok_codec.items():
+                self.stats.codec_bytes[cname] = \
+                    self.stats.codec_bytes.get(cname, 0) + nb
         return out
 
     def _run_single(self, key: str, fut: Future) -> None:

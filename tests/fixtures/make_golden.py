@@ -1,0 +1,154 @@
+"""Regenerate the golden v1/v2 archive fixtures.
+
+    PYTHONPATH=src python tests/fixtures/make_golden.py
+
+Writes, next to this script:
+
+    golden_v1.prs        format-v1 single-file container
+    golden_v2/           format-v2 sharded container (manifest.json + *.seg)
+    golden_expected.npz  reconstructions + byte accounting the fixtures
+                         must keep producing, recorded at generation time
+
+The fixtures freeze the *legacy* on-disk dialects so the codec registry's
+compatibility paths can never silently rot:
+
+  * v1/v2 plane segments tagged ``b"R"`` (raw words) / ``b"Z"`` (zlib),
+    gated on the legacy 0.45-0.55 density band;
+  * sign segments as bare (untagged) zlib streams;
+  * v1 manifests with 3-tuple ``(offset, size, crc)`` segment entries and
+    no ``blobs`` key; v2 manifests with 4-tuple ``(blob, offset, size,
+    crc)`` entries.
+
+The current encoder no longer *writes* any of this, so the fixtures are
+produced by transcoding a freshly refactored archive plane-by-plane into
+the legacy dialect (bit-exact raw words in, legacy entropy stage out),
+then downgrading the manifest.  Committed fixtures are the contract —
+regeneration is only needed if the *synthetic input* (ge_like_fields) or
+the quantizer ever changes, and such a change must be deliberate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import sys
+import zlib
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, os.pardir, "src"))
+
+from repro.bitplane.codecs import decode_sign_blob, decode_tagged  # noqa: E402
+from repro.bitplane.encoder import LevelBitplanes  # noqa: E402
+from repro.core.refactor import refactor_variables  # noqa: E402
+from repro.data.synthetic import ge_like_fields  # noqa: E402
+from repro.store.container import MAGIC, build_container, \
+    build_sharded_container  # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+N = 1 << 10
+EPS_LADDER = (1e-2, 1e-5, 1e-15)   # coarse, tight, full-precision pull
+
+_RAW_BAND = (0.45, 0.55)
+
+
+def _legacy_plane(words: np.ndarray, count: int) -> bytes:
+    """The pre-registry entropy stage, bit-for-bit: density-gated raw,
+    else zlib-if-it-shrinks."""
+    buf = words.tobytes()
+    if hasattr(np, "bitwise_count"):
+        density = int(np.bitwise_count(words).sum()) / count
+    else:
+        density = int(np.unpackbits(words.view(np.uint8)).sum()) / count
+    if _RAW_BAND[0] <= density <= _RAW_BAND[1]:
+        return b"R" + buf
+    z = zlib.compress(buf, 1)
+    return b"Z" + z if len(z) < len(buf) else b"R" + buf
+
+
+def _transcode_group(g: LevelBitplanes) -> LevelBitplanes:
+    if g.exponent is None:
+        return LevelBitplanes(count=g.count, exponent=None, nbits=g.nbits,
+                              planes=[], plane_raw_bits=g.plane_raw_bits,
+                              signs=b"")
+    nwords = (g.count + 31) // 32
+    planes = []
+    for blob in g.planes:
+        words = np.frombuffer(decode_tagged(blob, 4 * nwords),
+                              dtype=np.uint32, count=nwords)
+        planes.append(_legacy_plane(words, g.count))
+    sign_bits = decode_sign_blob(g.signs, (g.count + 7) // 8)
+    return LevelBitplanes(count=g.count, exponent=g.exponent, nbits=g.nbits,
+                          planes=planes, plane_raw_bits=g.plane_raw_bits,
+                          signs=zlib.compress(sign_bits, 1))
+
+
+def _transcode_archive(arch):
+    for var in arch.variables.values():
+        var.groups = [_transcode_group(g) for g in var.groups]
+    return arch
+
+
+def write_v1(arch, path: str) -> None:
+    manifest, payload = build_container(arch)
+    manifest["version"] = 1
+    manifest.pop("blobs", None)
+    segments = {}
+    for key, entry in manifest["segments"].items():
+        blob, off, size, crc = entry[:4]
+        assert blob == ""
+        segments[key] = [off, size, crc]
+    manifest["segments"] = segments
+    blob = json.dumps(manifest, sort_keys=True).encode("utf-8")
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<Q", len(blob)))
+        fh.write(blob)
+        fh.write(payload)
+
+
+def write_v2(arch, directory: str) -> None:
+    manifest, payloads = build_sharded_container(arch, shard_by="variable")
+    manifest["version"] = 2
+    manifest["segments"] = {key: list(entry[:4])
+                            for key, entry in manifest["segments"].items()}
+    os.makedirs(directory, exist_ok=True)
+    for blob, data in payloads.items():
+        with open(os.path.join(directory, blob), "wb") as fh:
+            fh.write(data)
+    with open(os.path.join(directory, "manifest.json"), "wb") as fh:
+        fh.write(json.dumps(manifest, sort_keys=True, indent=1
+                            ).encode("utf-8"))
+
+
+def main() -> None:
+    fields = ge_like_fields(n=N, seed=0)
+    vel = {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+    arch = _transcode_archive(refactor_variables(vel, method="hb"))
+
+    write_v1(arch, os.path.join(HERE, "golden_v1.prs"))
+    write_v2(arch, os.path.join(HERE, "golden_v2"))
+
+    expected = {}
+    session = arch.open()
+    for eps_i, eps in enumerate(EPS_LADDER):
+        for v in vel:
+            data, bound = session.reconstruct(v, eps)
+            expected[f"{v}__eps{eps_i}"] = data
+            expected[f"{v}__bound{eps_i}"] = np.float64(bound)
+    expected["eps_ladder"] = np.asarray(EPS_LADDER)
+    expected["bytes_retrieved"] = np.int64(session.bytes_retrieved)
+    np.savez_compressed(os.path.join(HERE, "golden_expected.npz"), **expected)
+
+    total = sum(os.path.getsize(os.path.join(HERE, f))
+                for f in ("golden_v1.prs",))
+    total += sum(os.path.getsize(os.path.join(HERE, "golden_v2", f))
+                 for f in os.listdir(os.path.join(HERE, "golden_v2")))
+    print(f"wrote golden fixtures under {HERE} "
+          f"({total / 1024:.1f} KiB containers, "
+          f"bytes_retrieved={session.bytes_retrieved})")
+
+
+if __name__ == "__main__":
+    main()

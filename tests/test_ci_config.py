@@ -218,9 +218,11 @@ def test_workflow_commands_are_runnable_here():
             for step in job["steps"] if "run" in step]
     joined = "\n".join(runs)
     assert "PYTHONPATH=src python -m pytest -x -q" in joined
-    assert "python -m benchmarks.run --only store" in joined
+    assert "python -m benchmarks.run --only store,entropy" in joined
     assert "python -m benchmarks.check_regression" in joined
     assert "--baseline BENCH_kernels.json" in joined
+    # the entropy-stage bench rows are part of the regression gate
+    assert "--prefix entropy/" in joined
     assert "python -m tools.check_links README.md docs" in joined
     # CI must stay one-sided/loose: the committed baseline is not recorded
     # on the runner class (two-sided 1.5x is the local invocation)
@@ -232,6 +234,23 @@ def test_workflow_commands_are_runnable_here():
     for mod in ("benchmarks.run", "benchmarks.check_regression",
                 "tools.check_links", "pytest"):
         assert importlib.util.find_spec(mod) is not None, mod
+
+
+def test_codec_conformance_suite_rides_in_tier1():
+    """The plane-codec conformance suite and the golden-archive tests run
+    on every tier-1 matrix leg: they carry no `slow` marker (the nightly
+    job is the only place slow tests run) and the fixtures they pin are
+    committed."""
+    for fname in ("test_entropy_codecs.py", "test_golden_archives.py"):
+        path = os.path.join(REPO, "tests", fname)
+        assert os.path.exists(path), fname
+        with open(path, encoding="utf-8") as fh:
+            assert "mark.slow" not in fh.read(), \
+                f"{fname} must stay in the tier-1 (not-slow) selection"
+    for fixture in ("golden_v1.prs", "golden_expected.npz",
+                    os.path.join("golden_v2", "manifest.json")):
+        assert os.path.exists(
+            os.path.join(REPO, "tests", "fixtures", fixture)), fixture
 
 
 @pytest.mark.skipif(yaml is None, reason="pyyaml unavailable")

@@ -1,0 +1,124 @@
+"""Golden-archive compatibility: committed v1/v2 containers must keep
+opening and decoding bit-identically forever.
+
+The fixtures under ``tests/fixtures/`` (see ``make_golden.py`` there) were
+written in the *legacy* on-disk dialects — v1 single-file / v2 sharded
+manifests, planes tagged ``b"R"``/``b"Z"``, sign planes as bare zlib
+streams — which the current encoder no longer produces.  These tests are
+the contract that manifest v3 (and any future codec work) can never
+silently break an old archive: reconstructions must match both the values
+recorded at fixture-generation time AND a fresh in-memory refactor (the
+cross-generation bit-identity invariant), with the legacy byte accounting
+intact.
+"""
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core.refactor import refactor_variables
+from repro.data.synthetic import ge_like_fields
+from repro.store import open_archive
+from repro.store.container import MAGIC
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
+V1_PATH = os.path.join(FIXTURES, "golden_v1.prs")
+V2_DIR = os.path.join(FIXTURES, "golden_v2")
+VARS = ("Vx", "Vy", "Vz")
+
+
+@pytest.fixture(scope="module")
+def expected():
+    with np.load(os.path.join(FIXTURES, "golden_expected.npz")) as z:
+        return {k: z[k] for k in z.files}
+
+
+@pytest.fixture(scope="module")
+def fresh_archive():
+    """A freshly refactored in-memory archive over the same fields — the
+    cross-generation reference every fixture must stay bit-identical to."""
+    fields = ge_like_fields(n=1 << 10, seed=0)
+    vel = {k: fields[k] for k in VARS}
+    return refactor_variables(vel, method="hb")
+
+
+@pytest.fixture
+def fresh_session(fresh_archive):
+    # sessions are stateful (never-go-backwards plane counts), so each test
+    # gets its own — a shared one would answer loose eps with tight values
+    return fresh_archive.open()
+
+
+def _manifest_version(source):
+    if os.path.isdir(source):
+        with open(os.path.join(source, "manifest.json"), "rb") as fh:
+            return json.loads(fh.read())["version"]
+    with open(source, "rb") as fh:
+        head = fh.read(len(MAGIC) + 8)
+        (mlen,) = struct.unpack("<Q", head[len(MAGIC):])
+        return json.loads(fh.read(mlen))["version"]
+
+
+@pytest.mark.parametrize("source", [V1_PATH, V2_DIR],
+                         ids=["v1-single-file", "v2-sharded"])
+def test_fixture_is_really_legacy_format(source):
+    """Guard the guard: if regeneration ever writes current-format
+    fixtures, the compatibility tests would be testing nothing."""
+    version = _manifest_version(source)
+    assert version == (1 if source.endswith(".prs") else 2)
+
+
+@pytest.mark.parametrize("source", [V1_PATH, V2_DIR],
+                         ids=["v1-single-file", "v2-sharded"])
+def test_golden_archive_decodes_bit_identically(source, expected,
+                                                fresh_session):
+    eps_ladder = expected["eps_ladder"]
+    with open_archive(source) as sa:
+        st = sa.open()
+        for eps_i, eps in enumerate(eps_ladder):
+            for v in VARS:
+                data, bound = st.reconstruct(v, float(eps))
+                np.testing.assert_array_equal(
+                    data, expected[f"{v}__eps{eps_i}"],
+                    err_msg=f"{source}: {v} at eps={eps} drifted from the "
+                            f"recorded golden values")
+                assert bound == float(expected[f"{v}__bound{eps_i}"])
+                ref, ref_bound = fresh_session.reconstruct(v, float(eps))
+                np.testing.assert_array_equal(
+                    data, ref,
+                    err_msg=f"{source}: {v} at eps={eps} drifted from a "
+                            f"fresh refactor — cross-generation bit "
+                            f"identity broken")
+                assert bound == ref_bound
+        # legacy byte accounting is part of the contract: segment sizes in
+        # a committed archive can never change
+        assert st.bytes_retrieved == int(expected["bytes_retrieved"])
+
+
+def test_golden_archive_reports_untagged_codecs(expected):
+    """v1/v2 manifests predate the codec field: every segment must surface
+    as 'untagged' in the codec accounting, and fetching must bucket the
+    moved bytes there (not misattribute them to a registered codec)."""
+    with open_archive(V1_PATH) as sa:
+        assert set(sa.codec_bytes()) == {"untagged"}
+        st = sa.open()
+        st.reconstruct("Vx", 1e-5)
+        stats = sa.fetcher.stats
+        assert set(stats.codec_bytes) == {"untagged"}
+        assert stats.codec_bytes["untagged"] == stats.bytes_fetched
+
+
+def test_golden_full_retrieval_exhausts_archive(expected):
+    """A full-precision pull through a legacy archive consumes every plane
+    of the requested variables — the deepest compatibility exercise (all
+    48 planes x all groups x legacy sign decode)."""
+    with open_archive(V2_DIR) as sa:
+        st = sa.open()
+        for v in VARS:
+            data, bound = st.reconstruct(v, 1e-15)
+            assert np.isfinite(data).all()
+            # all 48 planes consumed: only the quantization floor remains
+            assert bound < 1e-10
