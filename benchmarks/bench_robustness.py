@@ -1,0 +1,91 @@
+"""Robustness-path benches: end-to-end session cost under injected
+transient faults (repro.store.faults) at 0% / 1% / 5% per-read rates.
+
+What these rows watch across PRs:
+
+  * the zero-fault row is the retry layer's OVERHEAD — the policy wraps
+    every fetch even when nothing fails, so this must track the plain
+    store session bench;
+  * the faulted rows are the ABSORPTION cost — wall time and wire bytes
+    as the retry loop hides a deterministic, seeded fault schedule.  Wire
+    bytes only count delivered segments (failed attempts deliver nothing),
+    so byte inflation would flag double-charging in the accounting.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core.refactor import refactor_variables
+from repro.data.synthetic import ge_like_fields
+from repro.store import (
+    BlobQuarantine,
+    FaultInjectingByteStore,
+    FaultPlan,
+    MemoryByteStore,
+    RetryPolicy,
+)
+from repro.store.container import StoreArchive, build_sharded_container
+
+RATES = (0.0, 0.01, 0.05)
+POLICY = RetryPolicy(max_attempts=4, backoff_s=1e-3, backoff_cap_s=5e-3)
+
+
+def run():
+    rows = []
+    fields = ge_like_fields(n=1 << 15, seed=0)
+    vel = {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+    arch = refactor_variables(vel, method="hb")
+    manifest, payloads = build_sharded_container(arch, shard_by="single")
+    manifest = json.loads(json.dumps(manifest))
+    payload = payloads[""]
+
+    # untimed warmup: the first session pays reader jit/codec warmup that
+    # would otherwise land entirely on the fault=0% row
+    warm = StoreArchive(manifest, MemoryByteStore(payload),
+                        prefetch_workers=2)
+    try:
+        s = warm.open()
+        for v in vel:
+            s.reconstruct(v, 1e-6)
+    finally:
+        warm.close()
+
+    baseline_bytes = None
+    for rate in RATES:
+        # mixed plain-error/bit-flip schedule; the per-range cap of 2 keeps
+        # every schedule inside the 4-attempt budget (always heals)
+        plan = FaultPlan(rate=rate, error_weight=1.0, flip_weight=1.0,
+                         max_faults_per_range=2)
+        store = FaultInjectingByteStore(MemoryByteStore(payload), plan,
+                                        seed=0)
+        sa = StoreArchive(manifest, store, prefetch_workers=2,
+                          retry_policy=POLICY,
+                          quarantine=BlobQuarantine(threshold=8))
+        try:
+            t0 = time.perf_counter()
+            session = sa.open()
+            for eps in (1e-2, 1e-4, 1e-6):
+                for v in vel:
+                    session.prefetch(v, eps)
+                    session.reconstruct(v, eps)
+            dt = time.perf_counter() - t0
+            st = sa.fetcher.stats
+            if baseline_bytes is None:
+                baseline_bytes = st.bytes_fetched
+            # delivered wire bytes must not inflate with the fault rate:
+            # failed attempts deliver nothing and must not be charged
+            rows.append((f"robust/session/fault={rate:.0%}", dt * 1e6,
+                         f"bytes={st.bytes_fetched};"
+                         f"inflation={st.bytes_fetched / baseline_bytes:.3f};"
+                         f"injected={store.stats.total};"
+                         f"absorbed={st.faults_absorbed};"
+                         f"retries={st.retries}"))
+        finally:
+            sa.close()
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

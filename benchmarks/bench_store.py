@@ -99,11 +99,15 @@ def run():
                     f"store_reads={reads_1};"
                     f"coalesced={hs.stats.coalesced_ranges};"
                     f"retries={hs.stats.retries}"))
-                t0 = time.perf_counter()
-                s2 = ha.open()
-                for v in vel:
-                    s2.reconstruct(v, 1e-6)
-                dt_warm = time.perf_counter() - t0
+                # min-of-3: the warm pass is pure decode/recompose compute
+                # and a one-shot timing swings ~2x with box contention
+                dt_warm = float("inf")
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    s2 = ha.open()
+                    for v in vel:
+                        s2.reconstruct(v, 1e-6)
+                    dt_warm = min(dt_warm, time.perf_counter() - t0)
                 reads_2 = ha.fetcher.stats.store_reads - reads_1
                 rows.append((
                     "store/http_session_cached", dt_warm * 1e6,

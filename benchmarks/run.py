@@ -16,6 +16,9 @@ Paper mapping:
                                           prefetch hit rate, crc32c
   bench_entropy              (impl)       plane-codec density sweep + cost-
                                           model selection vs zlib stand-in
+  bench_robustness           (impl)       retrieval under injected transient
+                                          faults: wall time + wire bytes at
+                                          0/1/5% per-read fault rates
   bench_memory_bound         (impl)       contribution-cache budgets: peak
                                           bytes + warm latency at 1/.5/.25x
   bench_kernels              (impl)       kernel hot-loop micro-benches
@@ -36,6 +39,7 @@ MODULES = [
     "bench_transfer",
     "bench_store",
     "bench_entropy",
+    "bench_robustness",
     "bench_memory_bound",
     "bench_kernels",
     "bench_training_integration",

@@ -52,6 +52,17 @@ class PlaneSource:
     def planes(self, start: int, stop: int) -> Sequence[bytes]:
         raise NotImplementedError
 
+    def planes_available(self, start: int, stop: int):
+        """Deliverable prefix of planes [start, stop): ``(buffers, error)``,
+        with ``error`` None only when every plane arrived.  A bitplane
+        prefix is useful exactly as far as it is contiguous, so a source
+        that can fail partially (store-backed) overrides this to return
+        what it got; the default is all-or-nothing via ``planes``."""
+        try:
+            return list(self.planes(start, stop)), None
+        except Exception as e:
+            return [], e
+
     def signs(self) -> bytes:
         raise NotImplementedError
 
@@ -85,27 +96,53 @@ class LevelStream:
         self.meta = source.meta
         self.fetched = 0
         self.bytes_fetched = 0
+        # degraded mode: deepest reachable plane count once a segment of
+        # this group proved permanently unavailable (None = fully available)
+        self.pinned: Optional[int] = None
+        self.pin_error: Optional[BaseException] = None
         self._mag: Optional[np.ndarray] = None
         self._signs: Optional[bytes] = None
         self._values: Optional[np.ndarray] = None
 
+    def _pin(self, k: int, err: BaseException) -> None:
+        self.pinned = k
+        self.pin_error = err
+
     def fetch_to_planes(self, k: int) -> int:
-        """Retrieve planes up to k (MSB-first). Returns newly moved bytes."""
+        """Retrieve planes up to k (MSB-first). Returns newly moved bytes.
+
+        A permanently unavailable segment does not raise: the stream *pins*
+        at the deepest contiguous plane prefix it could decode — its bound
+        (computed from actually-decoded planes) stays valid, just wider
+        than requested — and records the cause in ``pin_error``."""
         meta = self.meta
         k = int(np.clip(k, 0, meta.nbits))
+        if self.pinned is not None:
+            k = min(k, self.pinned)
         if meta.exponent is None or k <= self.fetched:
             return 0
-        blobs = self.source.planes(self.fetched, k)
-        new_bytes = sum(meta.plane_sizes[self.fetched:k])
-        if self.fetched == 0:
-            self._signs = self.source.signs()  # signs ride with first plane
+        if self.fetched == 0 and self._signs is None:
+            try:
+                self._signs = self.source.signs()
+            except Exception as e:       # no signs -> no usable plane 0
+                self._pin(0, e)
+                return 0
+        blobs, err = self.source.planes_available(self.fetched, k)
+        got = self.fetched + len(blobs)
+        # signs ride with the first plane: their bytes are charged when a
+        # plane actually lands, keeping healthy-path accounting unchanged
+        new_bytes = sum(meta.plane_sizes[self.fetched:got])
+        if self.fetched == 0 and got > 0:
             new_bytes += meta.sign_size
-        self._mag = accumulate_planes(meta.count, meta.nbits, blobs,
-                                      self.fetched, state=self._mag)
-        self.fetched = k
-        self.bytes_fetched += new_bytes
-        self._values = None
-        return new_bytes
+        if blobs:
+            self._mag = accumulate_planes(meta.count, meta.nbits, blobs,
+                                          self.fetched, state=self._mag)
+            self.fetched = got
+            self.bytes_fetched += new_bytes
+            self._values = None
+        if err is not None:
+            self._pin(self.fetched, err)
+        return new_bytes if blobs else 0
 
     def fetch_to_eps(self, eps: float) -> int:
         return self.fetch_to_planes(planes_needed(self.meta, eps))
@@ -118,6 +155,8 @@ class LevelStream:
         if meta.exponent is None:
             return
         k = planes_needed(meta, eps)
+        if self.pinned is not None:
+            k = min(k, self.pinned)    # never speculate past the pin
         if k > self.fetched:
             self.source.prefetch(self.fetched, k, certain=certain)
 
@@ -138,6 +177,8 @@ class LevelStream:
     def reset(self) -> None:
         self.fetched = 0
         self.bytes_fetched = 0
+        self.pinned = None            # a re-read may find the blob healed
+        self.pin_error = None
         self._mag = None
         self._signs = None
         self._values = None

@@ -75,11 +75,13 @@ class SnapshotReader:
         # never go backwards: reuse an already-fetched tighter snapshot
         if self._cache is not None and self._cache[0] >= idx:
             idx = self._cache[0]
+        # decode BEFORE charging bytes: a store-backed _decode may fail, and
+        # a failed fetch must not leave the snapshot marked fetched/charged
+        if self._cache is None or self._cache[0] != idx:
+            self._cache = (idx, self._decode(idx))
         if not self.fetched[idx]:
             self.bytes_fetched += snaps[idx].nbytes
             self.fetched[idx] = True
-        if self._cache is None or self._cache[0] != idx:
-            self._cache = (idx, self._decode(idx))
         return self._cache[1], snaps[idx].safe_eps
 
 
@@ -129,13 +131,18 @@ class DeltaSnapshotReader:
         idx = self._select(eps)
         while self.n_fetched <= idx:
             snap = snaps[self.n_fetched]
-            self.bytes_fetched += snap.nbytes
+            # decode BEFORE charging: a store-backed _decode may fail, and a
+            # failed rung must not be charged or counted as applied
             delta = self._decode(self.n_fetched)
+            self.bytes_fetched += snap.nbytes
             self._decoded = delta if self._decoded is None \
                 else self._decoded + delta
             self.n_fetched += 1
-        # achieved bound: tightest applied snapshot + accumulation rounding
-        base = snaps[self.n_fetched - 1]
-        import numpy as _np
-        slack = 8 * _np.finfo(_np.float64).eps * base.amax * self.n_fetched
-        return self._decoded, base.eps + slack
+        return self._decoded, self.achieved_bound()
+
+    def achieved_bound(self) -> float:
+        """Bound certified by the rungs applied so far: tightest applied
+        snapshot's eps + accumulation rounding slack."""
+        base = self.archive.snapshots[self.n_fetched - 1]
+        slack = 8 * np.finfo(np.float64).eps * base.amax * self.n_fetched
+        return base.eps + slack

@@ -61,7 +61,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.bitplane.encoder import LevelBitplanes, encode_level
+from repro.bitplane.encoder import LevelBitplanes, encode_level, plane_bound
 from repro.bitplane.segments import InMemoryPlaneSource, LevelStream
 from repro.compressors.snapshots import (
     DeltaSnapshotArchive,
@@ -81,6 +81,21 @@ from repro.transform.hierarchical import (
 from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
 
 METHODS = ("hb", "ob", "psz3", "psz3_delta")
+
+
+@dataclass(frozen=True)
+class VarAvailability:
+    """Availability report for one variable of a degraded session.
+
+    ``floor`` is the tightest L-inf bound the variable can still certify
+    from the segments that *are* deliverable (for a healthy variable: the
+    codec's own floor at full plane depth).  ``pinned`` marks variables the
+    retrieval loop must stop tightening — requesting a smaller eps cannot
+    move more bytes.  ``detail`` carries the first underlying cause
+    (human-readable, for the serve-plane degradation report)."""
+    pinned: bool
+    floor: float
+    detail: str = ""
 
 
 @dataclass
@@ -350,6 +365,34 @@ class _BitplaneVarReader:
         kappa = ob_kappa(len(self.var.padded_shape))
         return float((1.0 + kappa) * np.sum(bounds[:-1]) + bounds[-1])
 
+    @property
+    def is_degraded(self) -> bool:
+        """True once any coefficient group pinned at a partial plane prefix
+        (a segment of it is permanently unavailable this session)."""
+        return any(s.pinned is not None for s in self.streams)
+
+    def availability_floor(self) -> float:
+        """Tightest bound certifiable from the deliverable plane prefixes:
+        each group contributes its bound at the deepest reachable plane
+        (the pin for degraded groups, full depth otherwise), composed
+        exactly like ``achieved_bound``."""
+        bounds = [plane_bound(s.meta, s.pinned if s.pinned is not None
+                              else s.meta.nbits) for s in self.streams]
+        if self.var.method == "hb":
+            return float(np.sum(bounds))
+        kappa = ob_kappa(len(self.var.padded_shape))
+        return float((1.0 + kappa) * np.sum(bounds[:-1]) + bounds[-1])
+
+    def availability(self) -> VarAvailability:
+        detail = ""
+        if self.is_degraded:
+            errs = [s.pin_error for s in self.streams
+                    if s.pin_error is not None]
+            detail = str(errs[0]) if errs else ""
+        return VarAvailability(pinned=self.is_degraded,
+                               floor=self.availability_floor(),
+                               detail=detail)
+
     def request(self, eps: float) -> Tuple[np.ndarray, float]:
         for s, budget in zip(self.streams, self._budgets(eps)):
             if s.fetch_to_eps(budget):
@@ -504,6 +547,24 @@ class RetrievalSession:
                 seen.add(id(st))
                 agg.merge(st)
         return agg
+
+    def availability(self) -> Dict[str, VarAvailability]:
+        """Per-variable availability for variables pinned by missing
+        segments — empty on a healthy session.  The retrieval loop uses the
+        reported floors to stop tightening pinned variables (see
+        core/retrieval.py); the serve plane prints them."""
+        out: Dict[str, VarAvailability] = {}
+        for name, r in self.readers.items():
+            get = getattr(r, "availability", None)
+            if get is not None:
+                a = get()
+                if a.pinned:
+                    out[name] = a
+        return out
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.availability())
 
     def prefetch(self, name: str, eps: float, certain: bool = True) -> None:
         """Non-binding hint that ``reconstruct(name, eps)`` is coming —

@@ -20,7 +20,7 @@ unattainable mid-retrieval).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.qoi import Expr
+from repro.core.refactor import VarAvailability
 
 REDUCTION_FACTOR = 1.5          # c in Alg 4
 MIN_REL_EPS = 2.0 ** -60        # full-fidelity floor
@@ -60,6 +61,12 @@ class RetrievalResult:
     bitrate: float
     iterations: List[IterationLog]
     converged: bool
+    # certified degraded mode: True when any variable was availability-
+    # pinned (permanently missing segments).  ``est_errors`` remain valid
+    # upper bounds — computed from what actually decoded — they just may
+    # exceed ``tau_abs``; ``availability`` reports the pinned variables.
+    degraded: bool = False
+    availability: Dict[str, VarAvailability] = field(default_factory=dict)
 
 
 def assign_eb(requests: Sequence[QoIRequest],
@@ -124,6 +131,7 @@ def retrieve_qoi_controlled(session,
     values: Dict[str, np.ndarray] = {}
     eb_arrays: Dict[str, np.ndarray] = {}
     achieved: Dict[str, float] = {}
+    pinned_vars: set = set()       # availability-pinned (degraded) variables
     converged = False
 
     for it in range(max_iters):
@@ -137,6 +145,19 @@ def retrieve_qoi_controlled(session,
             values[v] = data
             achieved[v] = ach
             eb_arrays[v] = session.eb_array(v, ach)
+
+        # -- availability-pinned variables (certified degraded mode): a
+        # variable whose segments are permanently unavailable cannot be
+        # tightened past its achievable floor — raise its ladder floor so
+        # reassign_eb freezes it there instead of re-requesting the same
+        # missing planes forever (the frozen/at_floor machinery below then
+        # guarantees termination exactly as for codec floors).
+        get_avail = getattr(session, "availability", None)
+        if get_avail is not None:
+            for v, a in get_avail().items():
+                if v in floors and np.isfinite(a.floor):
+                    floors[v] = max(floors[v], a.floor)
+                    pinned_vars.add(v)
 
         # -- QoI error estimation (lines 12-24)
         est_errors: Dict[str, float] = {}
@@ -174,7 +195,12 @@ def retrieve_qoi_controlled(session,
         req = next(r for r in requests if r.name == qname)
         involved = sorted(req.expr.variables())
         pt_vals = {v: values[v].ravel()[idx] for v in involved}
-        pt_ebs = {v: min(achieved[v], eps[v]) for v in involved}
+        # a pinned variable's bound cannot drop below what it achieved —
+        # seeding its ladder with the (unreachable) requested eps would
+        # predict tightenings the reconstruct pass can never deliver and
+        # spin the reassign loop until max_iters
+        pt_ebs = {v: achieved[v] if v in pinned_vars
+                  else min(achieved[v], eps[v]) for v in involved}
         # honour exact (masked) points
         for v in involved:
             pt_ebs[v] = float(eb_arrays[v].ravel()[idx]) if \
@@ -245,8 +271,12 @@ def retrieve_qoi_controlled(session,
             break
 
     bitrate = session.bitrate(needed)
+    get_avail = getattr(session, "availability", None)
+    availability = get_avail() if get_avail is not None else {}
     return RetrievalResult(values=values, achieved_eb=achieved,
                            est_errors=est_errors, tau_abs=tau_abs,
                            bytes_retrieved=session.bytes_retrieved,
                            bitrate=bitrate, iterations=logs,
-                           converged=converged)
+                           converged=converged,
+                           degraded=bool(availability),
+                           availability=availability)

@@ -37,8 +37,8 @@ from repro.core import ge
 from repro.core.refactor import ContribStats, refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
-from repro.store import (SegmentCache, open_archive, save_archive,
-                         save_sharded_archive)
+from repro.store import (BlobQuarantine, RetryPolicy, SegmentCache,
+                         open_archive, save_archive, save_sharded_archive)
 from repro.store.container import is_url
 
 
@@ -61,7 +61,9 @@ class RetrievalServer:
                  cache_bytes: int = 256 << 20,
                  cache_depth_weight: float = 64.0,
                  archive_floor_bytes: int = 0,
-                 contrib_budget_bytes: Optional[int] = None):
+                 contrib_budget_bytes: Optional[int] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 quarantine: Optional[BlobQuarantine] = None):
         t0 = time.time()
         self.cache: Optional[SegmentCache] = None
         self.contrib_budget_bytes = contrib_budget_bytes
@@ -77,7 +79,9 @@ class RetrievalServer:
             self.cache = SegmentCache(max_bytes=cache_bytes,
                                       depth_weight=cache_depth_weight,
                                       archive_floor_bytes=archive_floor_bytes)
-            self.archive = open_archive(store_path, cache=self.cache)
+            self.archive = open_archive(store_path, cache=self.cache,
+                                        retry_policy=retry_policy,
+                                        quarantine=quarantine)
             shapes = {k: np.asarray(v).shape for k, v in fields.items()}
             if self.archive.method != method or self.archive.shapes != shapes:
                 raise SystemExit(
@@ -105,7 +109,9 @@ class RetrievalServer:
                 "bytes_moved": session.bytes_retrieved - before,
                 "bitrate": res.bitrate, "latency_s": time.time() - t0,
                 "guaranteed": res.converged,
-                "est_errors": res.est_errors}
+                "est_errors": res.est_errors,
+                "degraded": res.degraded,
+                "availability": res.availability}
 
 
 def main(argv=None) -> int:
@@ -136,6 +142,19 @@ def main(argv=None) -> int:
                          "each session's bitplane readers; coarse-level "
                          "fields spill and are recomputed on demand "
                          "(default: unbounded)")
+    ap.add_argument("--retry-attempts", type=int, default=None,
+                    help="max fetch attempts per segment, counting the "
+                         "first try (default: RetryPolicy's 4; 1 disables "
+                         "retries)")
+    ap.add_argument("--retry-backoff-ms", type=float, default=None,
+                    help="base of the exponential retry backoff, in ms "
+                         "(full jitter, capped; default 50)")
+    ap.add_argument("--fetch-deadline-s", type=float, default=None,
+                    help="wall-clock budget for one segment fetch, all "
+                         "attempts included (default 30)")
+    ap.add_argument("--quarantine-after", type=int, default=None,
+                    help="consecutive failures that quarantine a blob "
+                         "(circuit breaker; default: 2x retry attempts)")
     ap.add_argument("--codecs", default=None, metavar="NAME[,NAME...]",
                     help="entropy-stage candidate codecs for refactoring "
                          "(e.g. 'zlib' pins the legacy stand-in; default: "
@@ -149,12 +168,27 @@ def main(argv=None) -> int:
     fields = ge_like_fields(n=args.n, seed=0)
     contrib_budget = None if args.contrib_mb is None \
         else int(args.contrib_mb * (1 << 20))
+    retry_policy = None
+    if (args.retry_attempts is not None or args.retry_backoff_ms is not None
+            or args.fetch_deadline_s is not None):
+        base = RetryPolicy()
+        retry_policy = RetryPolicy(
+            max_attempts=base.max_attempts if args.retry_attempts is None
+            else max(1, args.retry_attempts),
+            backoff_s=base.backoff_s if args.retry_backoff_ms is None
+            else args.retry_backoff_ms / 1e3,
+            deadline_s=base.deadline_s if args.fetch_deadline_s is None
+            else args.fetch_deadline_s)
+    quarantine = None if args.quarantine_after is None \
+        else BlobQuarantine(threshold=max(1, args.quarantine_after))
     server = RetrievalServer(fields, method=args.method,
                              store_path=args.store, shard_by=args.shard_by,
                              cache_bytes=args.cache_mb << 20,
                              cache_depth_weight=args.cache_depth_weight,
                              archive_floor_bytes=args.archive_floor_mb << 20,
-                             contrib_budget_bytes=contrib_budget)
+                             contrib_budget_bytes=contrib_budget,
+                             retry_policy=retry_policy,
+                             quarantine=quarantine)
     src = f"store {args.store}" if args.store else "in-memory archive"
     print(f"[server] {src} ready for {args.n} pts x5 vars in "
           f"{server.refactor_s:.2f}s "
@@ -169,6 +203,7 @@ def main(argv=None) -> int:
     clients = [f"client{i}" for i in range(4)]
     qoi_names = list(ge.all_qois())
     total_bytes = 0
+    degraded_vars: Dict[str, object] = {}
     for i in range(args.requests):
         req = Request(client=str(rng.choice(clients)),
                       qois=list(rng.choice(qoi_names,
@@ -177,12 +212,29 @@ def main(argv=None) -> int:
                       tau=float(10.0 ** -rng.integers(1, 6)))
         out = server.handle(req)
         total_bytes += out["bytes_moved"]
+        flag = " DEGRADED" if out["degraded"] else ""
         print(f"[req {i:02d}] {req.client} qois={','.join(req.qois):18s} "
               f"tau={req.tau:.0e} moved={out['bytes_moved']:>9d}B "
-              f"lat={out['latency_s'] * 1e3:7.1f}ms ok={out['guaranteed']}")
+              f"lat={out['latency_s'] * 1e3:7.1f}ms ok={out['guaranteed']}"
+              f"{flag}")
+        if out["degraded"]:
+            degraded_vars.update(out["availability"])
     raw = sum(v.nbytes for v in fields.values())
     print(f"[server] total moved {total_bytes / 2**20:.2f} MiB vs raw "
           f"{raw / 2**20:.2f} MiB ({total_bytes / raw:.0%})")
+    if degraded_vars:
+        print("[server] DEGRADED — some variables are pinned at the deepest "
+              "available plane prefix; reported bounds stay certified:")
+        for v, a in sorted(degraded_vars.items()):
+            print(f"[server]   {v}: achievable eps floor={a.floor:.3e}"
+                  + (f" ({a.detail})" if a.detail else ""))
+    if args.store:
+        fq = server.archive.fetcher
+        st = fq.stats
+        if st.retries or st.faults_absorbed or st.quarantined_blobs:
+            print(f"[server] faults: {st.faults_absorbed} absorbed over "
+                  f"{st.retries} retries, "
+                  f"{st.quarantined_blobs} blob quarantine trips")
     if args.store:
         st = server.archive.fetcher.stats
         print(f"[server] store: {st.bytes_fetched} segment bytes fetched in "

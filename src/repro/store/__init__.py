@@ -34,11 +34,19 @@ from repro.store.container import (
     segment_depth,
 )
 from repro.store.crc import crc32c
+from repro.store.faults import FaultInjectingByteStore, FaultPlan, FaultStats
 from repro.store.fetcher import (
     ChecksumError,
     FetchStats,
     SegmentEntry,
     SegmentFetcher,
+)
+from repro.store.retry import (
+    BlobQuarantine,
+    BlobQuarantinedError,
+    RetryPolicy,
+    SegmentUnavailableError,
+    is_transient,
 )
 
 __all__ = [
@@ -51,4 +59,7 @@ __all__ = [
     "open_archive", "memory_store_archive",
     "segment_depth", "manifest_archive_id",
     "crc32c", "SegmentFetcher", "SegmentEntry", "FetchStats", "ChecksumError",
+    "RetryPolicy", "BlobQuarantine", "BlobQuarantinedError",
+    "SegmentUnavailableError", "is_transient",
+    "FaultPlan", "FaultInjectingByteStore", "FaultStats",
 ]

@@ -34,6 +34,8 @@ import urllib.parse
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
+from repro.store.retry import RetryPolicy
+
 
 def _check_range(offset: int, length: int, size: int, label: str) -> None:
     """Uniform range validation for every backend: a negative length is a
@@ -138,7 +140,8 @@ class HTTPByteStore(ByteStore):
 
     def __init__(self, url: str, timeout_s: float = 10.0,
                  max_retries: int = 4, backoff_s: float = 0.05,
-                 coalesce_gap: int = 4096, size: Optional[int] = None):
+                 coalesce_gap: int = 4096, size: Optional[int] = None,
+                 retry_policy: Optional[RetryPolicy] = None):
         parts = urllib.parse.urlsplit(url)
         if parts.scheme not in ("http", "https"):
             raise ValueError(f"HTTPByteStore needs an http(s) URL, got {url!r}")
@@ -151,8 +154,13 @@ class HTTPByteStore(ByteStore):
                           if parts.scheme == "https"
                           else http.client.HTTPConnection)
         self.timeout_s = float(timeout_s)
-        self.max_retries = int(max_retries)
-        self.backoff_s = float(backoff_s)
+        # the unified policy subsumes the legacy (max_retries, backoff_s)
+        # knobs, which stay as a convenience spelling of the same thing
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else RetryPolicy(max_attempts=int(max_retries) + 1,
+                             backoff_s=float(backoff_s))
+        self.max_retries = self.retry_policy.max_attempts - 1
+        self.backoff_s = self.retry_policy.backoff_s
         self.coalesce_gap = int(coalesce_gap)
         self.stats = HTTPStats()
         self._stats_lock = threading.Lock()
@@ -173,6 +181,11 @@ class HTTPByteStore(ByteStore):
         conn = getattr(self._local, "conn", None)
         if conn is None:
             conn = self._conn_cls(self._host, timeout=self.timeout_s)
+            conn.connect()
+            # mirror the server's disable_nagle_algorithm: request headers
+            # go out in small writes, and Nagle would hold them hostage to
+            # the server's delayed ACK (~40ms per exchange)
+            conn.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             self._local.conn = conn
             with self._conns_lock:
                 self._conns.add(conn)
@@ -193,11 +206,18 @@ class HTTPByteStore(ByteStore):
         if self._closed:
             raise ValueError(f"I/O on closed HTTPByteStore {self.url}")
         last_err: Optional[Exception] = None
-        for attempt in range(self.max_retries + 1):
+        policy = self.retry_policy
+        deadline = policy.deadline_from(time.monotonic())
+        attempts = 0
+        for attempt in range(policy.max_attempts):
             if attempt:
+                sleep = policy.backoff(attempt)
+                if time.monotonic() + sleep > deadline:
+                    break                 # out of wall-clock budget
                 with self._stats_lock:
                     self.stats.retries += 1
-                time.sleep(self.backoff_s * (2.0 ** (attempt - 1)))
+                time.sleep(sleep)
+            attempts += 1
             try:
                 conn = self._conn()
                 conn.request(method, self._path, headers=headers)
@@ -216,7 +236,7 @@ class HTTPByteStore(ByteStore):
                 last_err = e
                 self._drop_conn()
         raise IOError(f"{method} {self.url}: giving up after "
-                      f"{self.max_retries + 1} attempts: {last_err}")
+                      f"{attempts} attempts: {last_err}")
 
     def _probe_size(self) -> int:
         status, headers, _ = self._request("HEAD", {})

@@ -67,6 +67,7 @@ from repro.core.refactor import (
     BitplaneVarArchive,
     RetrievalSession,
     SnapshotVarArchive,
+    VarAvailability,
     _BitplaneVarReader,
 )
 from repro.store.bytestore import ByteStore, FileByteStore, HTTPByteStore, \
@@ -74,6 +75,7 @@ from repro.store.bytestore import ByteStore, FileByteStore, HTTPByteStore, \
 from repro.store.cache import SegmentCache
 from repro.store.crc import crc32c
 from repro.store.fetcher import SegmentEntry, SegmentFetcher
+from repro.store.retry import BlobQuarantine, RetryPolicy
 from repro.transform.hierarchical import level_map
 
 MAGIC = b"PRSTORE1"
@@ -286,6 +288,12 @@ class FetcherPlaneSource(PlaneSource):
         return self.fetcher.fetch_many(
             f"{self.prefix}/p{b}" for b in range(start, stop))
 
+    def planes_available(self, start: int, stop: int):
+        # degraded-mode path: deliver the longest contiguous plane prefix
+        # instead of all-or-nothing (see SegmentFetcher.fetch_prefix)
+        return self.fetcher.fetch_prefix(
+            f"{self.prefix}/p{b}" for b in range(start, stop))
+
     def signs(self) -> bytes:
         return self.fetcher.fetch(f"{self.prefix}/signs")
 
@@ -380,8 +388,40 @@ class _SnapshotHandle:
 
 
 class _StoreSnapshotReader(SnapshotReader):
+    def __init__(self, archive):
+        super().__init__(archive)
+        self._pin_error: Optional[BaseException] = None
+
     def _decode(self, idx: int) -> np.ndarray:
         return sz_decompress(self.archive.snapshots[idx].load())
+
+    @property
+    def is_degraded(self) -> bool:
+        return self._pin_error is not None
+
+    def availability(self) -> VarAvailability:
+        if self._pin_error is None:
+            return VarAvailability(
+                pinned=False, floor=self.archive.snapshots[-1].safe_eps)
+        floor = self.archive.snapshots[self._cache[0]].safe_eps \
+            if self._cache is not None else float("inf")
+        return VarAvailability(pinned=True, floor=floor,
+                               detail=str(self._pin_error))
+
+    def request(self, eps: float) -> Tuple[np.ndarray, float]:
+        if self._pin_error is not None and self._cache is not None:
+            # availability-pinned: serve the deepest decoded snapshot —
+            # its bound is still a valid certificate, just wider
+            idx = self._cache[0]
+            return self._cache[1], self.archive.snapshots[idx].safe_eps
+        try:
+            return super().request(eps)
+        except Exception as e:
+            if self._cache is None:
+                raise          # nothing decoded yet: nothing to certify
+            self._pin_error = e
+            idx = self._cache[0]
+            return self._cache[1], self.archive.snapshots[idx].safe_eps
 
     def prefetch_eps(self, eps: float, certain: bool = True) -> None:
         # Independent snapshots are NOT prefix-monotone: a *predicted* eps
@@ -399,8 +439,38 @@ class _StoreSnapshotReader(SnapshotReader):
 
 
 class _StoreDeltaSnapshotReader(DeltaSnapshotReader):
+    def __init__(self, archive):
+        super().__init__(archive)
+        self._pin_error: Optional[BaseException] = None
+
     def _decode(self, idx: int) -> np.ndarray:
         return sz_decompress(self.archive.snapshots[idx].load())
+
+    @property
+    def is_degraded(self) -> bool:
+        return self._pin_error is not None
+
+    def availability(self) -> VarAvailability:
+        if self._pin_error is None:
+            snaps = self.archive.snapshots
+            tight = snaps[-1]
+            slack = 8 * np.finfo(np.float64).eps * tight.amax * len(snaps)
+            return VarAvailability(pinned=False, floor=tight.eps + slack)
+        floor = self.achieved_bound() if self.n_fetched else float("inf")
+        return VarAvailability(pinned=True, floor=floor,
+                               detail=str(self._pin_error))
+
+    def request(self, eps: float) -> Tuple[np.ndarray, float]:
+        if self._pin_error is not None and self.n_fetched:
+            # pinned: the residual ladder ends at the deepest applied rung
+            return self._decoded, self.achieved_bound()
+        try:
+            return super().request(eps)
+        except Exception as e:
+            if self.n_fetched == 0:
+                raise          # no rung applied: nothing to certify
+            self._pin_error = e
+            return self._decoded, self.achieved_bound()
 
     def prefetch_eps(self, eps: float, certain: bool = True) -> None:
         # The residual ladder is cumulative (request(eps) consumes ALL
@@ -447,19 +517,30 @@ class _LazyMasks:
         self._specs = specs
         self._fetcher = fetcher
         self._cache: Dict[str, OutlierMask] = {}
+        # variable -> first fetch failure: a permanently missing mask
+        # degrades to "no mask" — masked points are fully present in the
+        # progressive encoding (the mask only overlays their exact values),
+        # so serving the un-patched reconstruction under the plane bound
+        # stays certified; only the eb_array's exact-point zeros are lost
+        self._pinned: Dict[str, BaseException] = {}
 
     def get(self, name: str) -> Optional[OutlierMask]:
-        if name not in self._specs:
+        if name not in self._specs or name in self._pinned:
             return None
         if name not in self._cache:
             spec = self._specs[name]
             shape = tuple(spec["shape"])
-            bitmap = self._fetcher.fetch(f"{name}/mask/bitmap")
+            try:
+                bitmap = self._fetcher.fetch(f"{name}/mask/bitmap")
+                values = np.frombuffer(
+                    self._fetcher.fetch(f"{name}/mask/values"),
+                    dtype=np.float64, count=spec["n_true"])
+            except Exception as e:
+                self._pinned[name] = e
+                return None
             mask = np.unpackbits(
                 np.frombuffer(bitmap, dtype=np.uint8),
                 count=int(np.prod(shape))).astype(bool).reshape(shape)
-            values = np.frombuffer(self._fetcher.fetch(f"{name}/mask/values"),
-                                   dtype=np.float64, count=spec["n_true"])
             self._cache[name] = OutlierMask(mask=mask, values=values)
         return self._cache[name]
 
@@ -540,7 +621,9 @@ class StoreArchive:
                  payload_offset: int = 0, prefetch_workers: int = 2,
                  verify: bool = True,
                  cache: Optional[SegmentCache] = None,
-                 archive_id: Optional[str] = None):
+                 archive_id: Optional[str] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 quarantine: Optional[BlobQuarantine] = None):
         if manifest.get("format") != "prstore":
             raise ValueError("not a prstore manifest")
         if manifest.get("version", 0) > FORMAT_VERSION:
@@ -559,10 +642,23 @@ class StoreArchive:
         self._archive_id = archive_id
         index = _parse_segment_index(manifest, payload_offset,
                                      with_depth=cache is not None)
+        # store-backed sessions get the unified fault-tolerance defaults:
+        # retries with jittered backoff, and a circuit breaker whose
+        # threshold sits above one segment's full retry budget (a single
+        # persistently-corrupt segment must not quarantine a healthy blob)
+        if retry_policy is None:
+            retry_policy = RetryPolicy()
+        if quarantine is None:
+            quarantine = BlobQuarantine(
+                threshold=2 * retry_policy.max_attempts)
+        self.retry_policy = retry_policy
+        self.quarantine = quarantine
         self.fetcher = SegmentFetcher(index, store,
                                       prefetch_workers=prefetch_workers,
                                       verify=verify, cache=cache,
-                                      archive_id=archive_id or "")
+                                      archive_id=archive_id or "",
+                                      retry_policy=retry_policy,
+                                      quarantine=quarantine)
         self.masks = _LazyMasks(manifest["masks"], self.fetcher)
         self.variables: Dict[str, object] = {}
         for name, spec in manifest["variables"].items():
@@ -627,7 +723,9 @@ def is_url(source: str) -> bool:
 def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
                  blob_resolver: Optional[Callable[[str], ByteStore]] = None,
                  cache: Optional[SegmentCache] = None,
-                 archive_id: Optional[str] = None) -> StoreArchive:
+                 archive_id: Optional[str] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 quarantine: Optional[BlobQuarantine] = None) -> StoreArchive:
     """Open a container — single-file, sharded, local, or over HTTP.
 
     ``source`` may be:
@@ -649,6 +747,12 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
 
     ``archive_id`` overrides the cache budget-group id (default: a hash of
     the manifest — see ``manifest_archive_id``).
+
+    ``retry_policy`` / ``quarantine`` configure the fault-tolerance layer
+    (repro.store.retry): the policy drives both the fetcher's retry loop
+    (every backend) and any HTTP stores this function constructs; the
+    quarantine is the per-blob circuit breaker.  Defaults (None) enable
+    both — pass ``RetryPolicy.none()`` to disable retries.
     """
     def build(manifest: dict, default: Optional[StoreSpec],
               payload_offset: int = 0) -> StoreArchive:
@@ -656,7 +760,14 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
                             payload_offset=payload_offset,
                             prefetch_workers=prefetch_workers,
                             verify=verify, cache=cache,
-                            archive_id=archive_id)
+                            archive_id=archive_id,
+                            retry_policy=retry_policy,
+                            quarantine=quarantine)
+
+    def http_store(url: str, **kw) -> HTTPByteStore:
+        if retry_policy is not None:
+            kw["retry_policy"] = retry_policy
+        return HTTPByteStore(url, **kw)
 
     if isinstance(source, dict):
         if blob_resolver is None:
@@ -667,15 +778,15 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
         # detect on the parsed path, not the raw string — signed /
         # parameterized URLs carry query strings after the filename
         if urllib.parse.urlsplit(source).path.endswith(".json"):
-            with HTTPByteStore(source) as ms:
+            with http_store(source) as ms:
                 manifest = json.loads(ms.read_all().decode("utf-8"))
             # blob sizes are recorded in the manifest, so shard stores skip
             # their HEAD probe entirely (one GET per first-touched shard)
             blob_sizes = manifest.get("blobs", {})
-            return build(manifest, lambda blob: HTTPByteStore(
+            return build(manifest, lambda blob: http_store(
                 urllib.parse.urljoin(source, blob),
                 size=blob_sizes.get(blob)))
-        source = HTTPByteStore(source)
+        source = http_store(source)
 
     if isinstance(source, str):
         if os.path.isdir(source) or source.endswith(".json"):
@@ -703,17 +814,22 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
                             payload_offset=len(MAGIC) + 8 + mlen,
                             prefetch_workers=prefetch_workers,
                             verify=verify, cache=cache,
-                            archive_id=archive_id)
+                            archive_id=archive_id,
+                            retry_policy=retry_policy, quarantine=quarantine)
     return StoreArchive(manifest, store,
                         payload_offset=len(MAGIC) + 8 + mlen,
                         prefetch_workers=prefetch_workers, verify=verify,
-                        cache=cache, archive_id=archive_id)
+                        cache=cache, archive_id=archive_id,
+                        retry_policy=retry_policy, quarantine=quarantine)
 
 
 def memory_store_archive(archive: Archive, prefetch_workers: int = 2,
                          verify: bool = True, shard_by: str = "single",
                          cache: Optional[SegmentCache] = None,
-                         archive_id: Optional[str] = None) -> StoreArchive:
+                         archive_id: Optional[str] = None,
+                         retry_policy: Optional[RetryPolicy] = None,
+                         quarantine: Optional[BlobQuarantine] = None
+                         ) -> StoreArchive:
     """Round an in-memory Archive through the container format without
     touching disk (tests, benchmarks).  ``shard_by`` exercises the sharded
     manifest with one MemoryByteStore per blob."""
@@ -723,4 +839,5 @@ def memory_store_archive(archive: Archive, prefetch_workers: int = 2,
     spec: StoreSpec = stores if shard_by != "single" else stores.get(
         "", MemoryByteStore(b""))
     return StoreArchive(manifest, spec, prefetch_workers=prefetch_workers,
-                        verify=verify, cache=cache, archive_id=archive_id)
+                        verify=verify, cache=cache, archive_id=archive_id,
+                        retry_policy=retry_policy, quarantine=quarantine)

@@ -63,6 +63,14 @@ from repro.bitplane.codecs import codec_name
 from repro.store.bytestore import ByteStore
 from repro.store.cache import SegmentCache
 from repro.store.crc import crc32c
+from repro.store.retry import (
+    OPEN,
+    PROBE,
+    BlobQuarantine,
+    BlobQuarantinedError,
+    RetryPolicy,
+    is_transient,
+)
 
 
 class ChecksumError(IOError):
@@ -102,6 +110,10 @@ class FetchStats:
     demand_wait_s: float = 0.0  # time the caller spent blocked on reads
     store_reads: int = 0       # segment reads that hit a ByteStore
     cache_hits: int = 0        # segment reads absorbed by a SegmentCache
+    # fault-tolerance counters (see repro.store.retry):
+    retries: int = 0           # fetcher-level re-attempts after a failure
+    faults_absorbed: int = 0   # failed attempts hidden by a later success
+    quarantined_blobs: int = 0  # circuit-open events (blob quarantined)
     # contribution-cache counters (ContribStats sink for store-backed
     # bitplane readers — see core/refactor.py for exact semantics):
     contrib_resident_bytes: int = 0  # contribution fields currently retained
@@ -129,12 +141,19 @@ class SegmentFetcher:
                  prefetch_workers: int = 2, verify: bool = True,
                  max_inflight: int = 512,
                  cache: Optional[SegmentCache] = None,
-                 archive_id: str = ""):
+                 archive_id: str = "",
+                 retry_policy: Optional[RetryPolicy] = None,
+                 quarantine: Optional[BlobQuarantine] = None):
         self.index = index
         self.verify = verify
         self.max_inflight = max_inflight
         self.cache = cache
         self.archive_id = archive_id
+        # default = legacy behaviour: one attempt, no circuit breaker.
+        # open_archive turns both on for store-backed sessions.
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else RetryPolicy.none()
+        self.quarantine = quarantine
         self.stats = FetchStats()
         self._lock = threading.Lock()
         # key -> (future, from_hint, evictable): from_hint buckets the stats
@@ -231,6 +250,79 @@ class SegmentFetcher:
                            depth=entry.depth, archive=self.archive_id)
         return buf
 
+    def _read_retrying(self, key: str, wait_for_probe: bool = True) -> bytes:
+        """``_read_verified`` under the fetcher's RetryPolicy and blob
+        quarantine.
+
+        Transient failures (timeouts, resets, checksum mismatches — see
+        ``retry.is_transient``) retry with capped, jittered backoff inside
+        the policy's deadline; permanent ones raise immediately.  Every
+        failed attempt feeds the blob's circuit breaker.  On a quarantined
+        blob the fetch waits (deadline permitting) for the half-open window
+        and makes exactly ONE probe — a failed probe raises immediately
+        instead of burning the remaining budget on a blob that is known
+        dead; when the wait does not fit the deadline, the fetch fast-fails
+        with ``BlobQuarantinedError``.  Retry exhaustion re-raises the last
+        *underlying* error, so callers still see ``ChecksumError`` /
+        ``FileNotFoundError`` etc. with their original messages.
+
+        ``wait_for_probe=False`` (background pool reads) fast-fails on an
+        open circuit instead of sleeping out the cooldown: prefetches queued
+        before the circuit opened must not serialize cooldown sleeps on the
+        pool — the CONSUMING fetch owns the wait and the single probe (it
+        retries on ``BlobQuarantinedError``, see ``fetch``)."""
+        policy = self.retry_policy
+        q = self.quarantine
+        blob = self.index[key].blob
+        deadline = policy.deadline_from(time.monotonic())
+        last: Optional[BaseException] = None
+        failures = 0
+        for attempt in range(1, policy.max_attempts + 1):
+            if attempt > 1:
+                sleep = policy.backoff(attempt - 1)
+                if time.monotonic() + sleep > deadline:
+                    break                 # out of wall-clock budget
+                with self._lock:
+                    self.stats.retries += 1
+                time.sleep(sleep)
+            probing = False
+            if q is not None:
+                # once a probe token is held the read below MUST run, so its
+                # outcome releases the token — no early exits in between
+                state, wait = q.check(blob)
+                while state == OPEN:
+                    if not wait_for_probe \
+                            or time.monotonic() + wait > deadline:
+                        exc = BlobQuarantinedError(
+                            f"segment {key!r}: blob {blob!r} quarantined "
+                            f"(next probe in {wait:.3f}s"
+                            + ("" if wait_for_probe
+                               else "; background read does not wait") + ")")
+                        exc.__cause__ = last
+                        raise exc
+                    time.sleep(wait)
+                    state, wait = q.check(blob)
+                probing = state == PROBE
+            try:
+                buf = self._read_verified(key)
+            except BaseException as e:
+                last = e
+                failures += 1
+                if q is not None and q.record_failure(blob):
+                    with self._lock:
+                        self.stats.quarantined_blobs += 1
+                if probing or not is_transient(e):
+                    raise
+                continue
+            if q is not None:
+                q.record_success(blob)
+            if failures:
+                with self._lock:
+                    self.stats.faults_absorbed += failures
+            return buf
+        assert last is not None
+        raise last                 # budget exhausted: surface the real cause
+
     def _read_results_many(self, keys: List[str]
                            ) -> Dict[str, object]:
         """Batched read of same-blob keys, letting batch-preferring stores
@@ -292,7 +384,7 @@ class SegmentFetcher:
         if not fut.set_running_or_notify_cancel():
             return
         try:
-            fut.set_result(self._read_verified(key))
+            fut.set_result(self._read_retrying(key, wait_for_probe=False))
         except BaseException as e:        # surfaced at the consuming fetch
             fut.set_exception(e)
 
@@ -304,6 +396,17 @@ class SegmentFetcher:
             res = {k: e for k in live}
         for k in live:
             r = res[k]
+            if isinstance(r, BaseException) \
+                    and self.retry_policy.retries_enabled and is_transient(r):
+                # the coalesced first attempt missed this key; spend the
+                # rest of the policy's budget on per-key reads (retries
+                # don't coalesce — the fault may be range-local)
+                try:
+                    r = self._read_retrying(k, wait_for_probe=False)
+                    with self._lock:
+                        self.stats.faults_absorbed += 1   # the batched miss
+                except BaseException as e2:
+                    r = e2
             if isinstance(r, BaseException):
                 futs[k].set_exception(r)
             else:
@@ -318,14 +421,20 @@ class SegmentFetcher:
         t0 = time.perf_counter()
         if entry is not None:
             fut, from_hint, _ = entry
-            buf = fut.result()       # raises ChecksumError from the worker
+            try:
+                buf = fut.result()   # raises ChecksumError from the worker
+            except BlobQuarantinedError:
+                # the worker fast-failed without spending a retry budget on
+                # this key; a demand read gets its own deadline (and the
+                # half-open probe, if the cooldown has lapsed by now)
+                buf = self._read_retrying(key)
             with self._lock:
                 if from_hint:
                     self.stats.prefetch_hits += 1
                 else:
                     self.stats.pipelined_hits += 1
         else:
-            buf = self._read_verified(key)
+            buf = self._read_retrying(key)
             with self._lock:
                 self.stats.demand_fetches += 1
         with self._lock:
@@ -341,6 +450,30 @@ class SegmentFetcher:
         if self._pool is not None and len(keys) > 1:
             self._submit(keys, from_hint=False, evictable=False)
         return [self.fetch(k) for k in keys]
+
+    def fetch_prefix(self, keys: Iterable[str]
+                     ) -> Tuple[List[bytes], Optional[BaseException]]:
+        """Fetch an ordered list of segments, stopping at the first one that
+        cannot be delivered: returns ``(buffers, error)`` where ``buffers``
+        is the longest deliverable prefix and ``error`` is ``None`` only
+        when every key arrived.  This is degraded mode's workhorse — a
+        bitplane prefix is useful exactly as far as it is contiguous, so a
+        miss at plane k makes planes >k moot for this session."""
+        keys = list(keys)
+        if self._pool is not None and len(keys) > 1:
+            self._submit(keys, from_hint=False, evictable=False)
+        bufs: List[bytes] = []
+        for i, k in enumerate(keys):
+            try:
+                bufs.append(self.fetch(k))
+            except Exception as e:
+                # the tail is moot: forget its in-flight entries so futures
+                # nobody will consume don't pin payloads until close()
+                with self._lock:
+                    for tail in keys[i + 1:]:
+                        self._inflight.pop(tail, None)
+                return bufs, e
+        return bufs, None
 
     def prefetch(self, keys: Iterable[str], certain: bool = True) -> None:
         """Start background fetches for hinted keys; no-op without a worker
@@ -365,6 +498,12 @@ class SegmentFetcher:
                         self._inflight[k] = (entry[0], entry[1], False)
             fresh = [k for k in keys
                      if k in self.index and k not in self._inflight]
+            if from_hint and self.quarantine is not None:
+                # speculative reads on a quarantined blob would fill the
+                # pool with cooldown sleeps; let demand fetches (which own
+                # a deadline) decide whether to wait for the probe
+                fresh = [k for k in fresh if not self.quarantine
+                         .is_quarantined(self.index[k].blob)]
             # evict oldest completed *evictable* entries (abandoned
             # predictions) so unconsumed speculation cannot pin the archive;
             # certain entries are always consumed by their caller, and

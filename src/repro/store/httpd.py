@@ -38,8 +38,11 @@ def parse_range(header: str, size: int) -> Optional[Tuple[int, int]]:
         return None
     if first == "":                      # suffix form: last N bytes
         n = int(last)
-        if n == 0:
-            raise ValueError("empty suffix range")
+        if n == 0 or size == 0:
+            # RFC 9110 §14.1.2: a suffix range on an empty resource (or an
+            # empty suffix) is unsatisfiable — (0, -1) would slice garbage
+            raise ValueError(
+                f"unsatisfiable suffix range {header!r} for size {size}")
         return max(0, size - n), size - 1
     start = int(first)
     end = int(last) if last != "" else size - 1
@@ -51,6 +54,10 @@ def parse_range(header: str, size: int) -> Optional[Tuple[int, int]]:
 class _ArchiveHandler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"       # keep-alive: client connections reuse
     server_version = "prstore-httpd/1"
+    # the header write + body write per response is exactly the
+    # write-write-read pattern where Nagle + the peer's delayed ACK stall
+    # every exchange ~40ms; range GETs are latency-bound, so flush eagerly
+    disable_nagle_algorithm = True
 
     def _resolve(self) -> Optional[str]:
         root = self.server.root          # type: ignore[attr-defined]

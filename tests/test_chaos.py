@@ -1,0 +1,180 @@
+"""Seeded chaos suite: the retrieval plane under injected faults.
+
+Two contracts (ISSUE 6 tentpole):
+
+  * HEALING schedules — every injected fault is transient (the per-range
+    budget of ``FaultPlan.max_faults_per_range`` is below the RetryPolicy's
+    attempt budget) — must be INVISIBLE: the retrieval result is
+    bit-identical to the fault-free run, for all four archive methods, with
+    identical byte accounting.
+
+  * PERMANENT loss must DEGRADE, not lie: the result is flagged, the lost
+    variable reports its availability floor, the loop terminates without
+    spinning, and the reported error bound still upper-bounds the true QoI
+    error measured against ground truth.
+
+Every schedule is a pure function of its seed (repro.store.faults); on
+failure the seed is printed so the run reproduces exactly.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ge
+from repro.core.refactor import METHODS, refactor_variables
+from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
+from repro.data.synthetic import ge_like_fields
+from repro.store import (
+    BlobQuarantine,
+    FaultInjectingByteStore,
+    FaultPlan,
+    MemoryByteStore,
+    RetryPolicy,
+)
+from repro.store.container import StoreArchive, build_sharded_container
+
+pytestmark = pytest.mark.chaos
+
+SEEDS = (1, 2)
+
+# every fault kind at once; the per-range cap of 2 stays below the retry
+# policy's 4 attempts, so every schedule is guaranteed to heal
+HEALING_PLAN = FaultPlan(rate=0.3, error_weight=1.0, timeout_weight=1.0,
+                         truncate_weight=1.0, flip_weight=1.0,
+                         slow_weight=0.5, slow_s=1e-4,
+                         max_faults_per_range=2)
+POLICY = RetryPolicy(max_attempts=4, backoff_s=1e-3, backoff_cap_s=5e-3)
+
+
+def _vel(n=1 << 10):
+    fields = ge_like_fields(n=n, seed=0)
+    return {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+
+
+_ARCHIVES = {}
+
+
+def _archive(method):
+    if method not in _ARCHIVES:
+        _ARCHIVES[method] = refactor_variables(_vel(), method=method)
+    return _ARCHIVES[method]
+
+
+def _chaos_archive(arch, seed, plan=HEALING_PLAN, shard_by="single",
+                   dead_blobs=(), **kw):
+    """StoreArchive whose every blob sits behind a seeded fault injector;
+    blobs named in ``dead_blobs`` never deliver (permanent loss)."""
+    manifest, payloads = build_sharded_container(arch, shard_by=shard_by)
+    manifest = json.loads(json.dumps(manifest))
+    stores = {}
+    for blob, data in payloads.items():
+        p = FaultPlan(rate=0.0, dead_ranges=((0, len(data)),)) \
+            if blob in dead_blobs else plan
+        stores[blob] = FaultInjectingByteStore(MemoryByteStore(data), p,
+                                               seed=seed)
+    spec = stores if shard_by != "single" else stores[""]
+    kw.setdefault("retry_policy", POLICY)
+    kw.setdefault("quarantine", BlobQuarantine(threshold=8, cooldown_s=0.01))
+    return StoreArchive(manifest, spec, prefetch_workers=2, **kw), stores
+
+
+def _reseed(seed, fn):
+    """Run ``fn``; on assertion failure print the reproducing seed."""
+    try:
+        fn()
+    except AssertionError:
+        print(f"\n[chaos] FAILING SEED: {seed} — rerun with "
+              f"FaultInjectingByteStore(seed={seed}) to reproduce")
+        raise
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("method", METHODS)
+def test_healing_faults_are_bit_identical(method, seed):
+    """A fully-healing fault schedule changes NOTHING: values, achieved
+    bounds, error estimates and byte accounting all match the fault-free
+    run exactly, for every archive method."""
+    arch = _archive(method)
+    reqs = [QoIRequest("VTOT", ge.v_total(), 1e-3)]
+
+    clean = retrieve_qoi_controlled(arch.open(), reqs)
+    sa, stores = _chaos_archive(arch, seed)
+    try:
+        res = retrieve_qoi_controlled(sa.open(), reqs)
+
+        def check():
+            injected = sum(s.stats.total for s in stores.values())
+            assert injected > 0, "schedule fired no faults — vacuous run"
+            assert not res.degraded and res.converged == clean.converged
+            for v in clean.values:
+                np.testing.assert_array_equal(res.values[v], clean.values[v])
+                assert res.achieved_eb[v] == clean.achieved_eb[v]
+            assert res.est_errors == clean.est_errors
+            assert res.bytes_retrieved == clean.bytes_retrieved
+            st = sa.fetcher.stats
+            assert st.faults_absorbed > 0    # the faults were real, and hidden
+        _reseed(seed, check)
+    finally:
+        sa.close()
+
+
+@pytest.mark.parametrize("seed", (0,))
+def test_permanent_loss_degrades_with_certified_bound(seed):
+    """Losing a whole variable shard yields a flagged degraded result whose
+    reported bound still upper-bounds the TRUE QoI error, and the loop
+    terminates instead of re-requesting the missing planes forever."""
+    vel = _vel()
+    arch = _archive("hb")
+    reqs = [QoIRequest("VTOT", ge.v_total(), 1e-4)]
+    sa, _ = _chaos_archive(arch, seed, shard_by="variable",
+                           dead_blobs=("Vz.seg",))
+    try:
+        res = retrieve_qoi_controlled(sa.open(), reqs)
+
+        def check():
+            assert res.degraded and not res.converged
+            assert set(res.availability) == {"Vz"}
+            a = res.availability["Vz"]
+            assert a.pinned and np.isfinite(a.floor) and a.floor > 0
+            # no infinite reassign spin on the pinned variable
+            assert len(res.iterations) < 25
+            # per-variable certification against ground truth ...
+            for v in vel:
+                err = float(np.max(np.abs(vel[v] - res.values[v])))
+                assert err <= res.achieved_eb[v] * (1 + 1e-12)
+            # ... and the derived QoI's reported bound holds too
+            true_q = np.sqrt(sum(vel[v] ** 2 for v in ("Vx", "Vy", "Vz")))
+            rec_q = np.sqrt(sum(res.values[v] ** 2
+                                for v in ("Vx", "Vy", "Vz")))
+            q_err = float(np.max(np.abs(true_q - rec_q)))
+            assert q_err <= res.est_errors["VTOT"] * (1 + 1e-12)
+        _reseed(seed, check)
+    finally:
+        sa.close()
+
+
+@pytest.mark.parametrize("seed", (3,))
+def test_faults_then_loss_compose(seed):
+    """Transient faults on the surviving shards + permanent loss of one:
+    the healthy variables still land bit-identical to fault-free, the lost
+    one degrades."""
+    arch = _archive("hb")
+    mem = arch.open()
+    sa, _ = _chaos_archive(arch, seed, shard_by="variable",
+                           dead_blobs=("Vy.seg",))
+    try:
+        st = sa.open()
+
+        def check():
+            for v in ("Vx", "Vz"):
+                a, ba = mem.reconstruct(v, 1e-6)
+                b, bb = st.reconstruct(v, 1e-6)
+                np.testing.assert_array_equal(a, b)
+                assert ba == bb
+            _, bound = st.reconstruct("Vy", 1e-6)
+            assert st.degraded and set(st.availability()) == {"Vy"}
+            assert bound >= st.availability()["Vy"].floor
+        _reseed(seed, check)
+    finally:
+        sa.close()

@@ -223,6 +223,9 @@ def test_workflow_commands_are_runnable_here():
     assert "--baseline BENCH_kernels.json" in joined
     # the entropy-stage bench rows are part of the regression gate
     assert "--prefix entropy/" in joined
+    # ... and so are the robustness rows (retry/fault-injection overhead)
+    assert "--only store,entropy,robust" in joined
+    assert "--prefix robust/" in joined
     assert "python -m tools.check_links README.md docs" in joined
     # CI must stay one-sided/loose: the committed baseline is not recorded
     # on the runner class (two-sided 1.5x is the local invocation)
@@ -262,3 +265,8 @@ def test_nightly_job_is_schedule_gated():
     for name in ("lint", "docs", "test", "bench-gate"):
         assert "schedule" in jobs[name]["if"]
     assert "-m slow" in jobs["nightly-slow"]["steps"][-1]["run"]
+    # the seeded chaos suite rides the nightly schedule, unbuffered so a
+    # failing schedule's reproducing seed lands in the job log
+    chaos_runs = [s["run"] for s in jobs["nightly-slow"]["steps"]
+                  if "-m chaos" in s.get("run", "")]
+    assert chaos_runs and all("-s" in r for r in chaos_runs)
