@@ -21,6 +21,9 @@ Paper mapping:
                                           0/1/5% per-read fault rates
   bench_memory_bound         (impl)       contribution-cache budgets: peak
                                           bytes + warm latency at 1/.5/.25x
+  bench_serve_concurrent     (impl)       serve plane: 64 clients, worker
+                                          pool + coalescing vs sequential
+                                          (speedup, p50/p99 tail amp)
   bench_kernels              (impl)       kernel hot-loop micro-benches
   bench_training_integration (beyond)     progressive ckpt + grad compression
 Roofline/dry-run tables are built by benchmarks/roofline.py from
@@ -41,6 +44,7 @@ MODULES = [
     "bench_entropy",
     "bench_robustness",
     "bench_memory_bound",
+    "bench_serve_concurrent",
     "bench_kernels",
     "bench_training_integration",
 ]

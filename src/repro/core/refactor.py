@@ -56,6 +56,7 @@ repro.store.fetcher).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -116,19 +117,47 @@ class ContribStats:
       * ``contrib_recomputes``     — budget-induced rebuilds: refreshes of a
         level whose plane count had NOT moved (an unbounded reader would
         have served it from cache).
+
+    A sink is often SHARED — store-backed readers across every concurrent
+    session of one archive aggregate into their fetcher's FetchStats — so
+    all mutation funnels through ``contrib_note`` (one lock-guarded
+    read-modify-write; the peak update must see its own delta, which bare
+    ``+=`` from racing threads cannot guarantee).
     """
     contrib_resident_bytes: int = 0
     contrib_peak_bytes: int = 0
     contrib_spills: int = 0
     contrib_recomputes: int = 0
 
+    def __post_init__(self) -> None:
+        self._mu = threading.Lock()
+
+    def contrib_note(self, delta_bytes: int = 0, spills: int = 0,
+                     recomputes: int = 0) -> None:
+        """Atomically apply a residency delta / spill / recompute event."""
+        with self._mu:
+            self.contrib_resident_bytes += delta_bytes
+            if self.contrib_resident_bytes > self.contrib_peak_bytes:
+                self.contrib_peak_bytes = self.contrib_resident_bytes
+            self.contrib_spills += spills
+            self.contrib_recomputes += recomputes
+
+    def contrib_snapshot(self) -> Tuple[int, int, int, int]:
+        with self._mu:
+            return (self.contrib_resident_bytes, self.contrib_peak_bytes,
+                    self.contrib_spills, self.contrib_recomputes)
+
     def merge(self, other) -> "ContribStats":
         """Accumulate another carrier of the ``contrib_*`` counters
         (another ContribStats, or a store fetcher's FetchStats)."""
-        self.contrib_resident_bytes += other.contrib_resident_bytes
-        self.contrib_peak_bytes += other.contrib_peak_bytes
-        self.contrib_spills += other.contrib_spills
-        self.contrib_recomputes += other.contrib_recomputes
+        snap = other.contrib_snapshot() if hasattr(other, "contrib_snapshot") \
+            else (other.contrib_resident_bytes, other.contrib_peak_bytes,
+                  other.contrib_spills, other.contrib_recomputes)
+        with self._mu:
+            self.contrib_resident_bytes += snap[0]
+            self.contrib_peak_bytes += snap[1]
+            self.contrib_spills += snap[2]
+            self.contrib_recomputes += snap[3]
         return self
 
 
@@ -156,10 +185,11 @@ class BitplaneVarArchive:
         surface shared with store-backed variables (repro.store)."""
         return [InMemoryPlaneSource(g) for g in self.groups]
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None
-                    ) -> "_BitplaneVarReader":
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
+                    contrib_pool=None) -> "_BitplaneVarReader":
         return _BitplaneVarReader(self,
-                                  contrib_budget_bytes=contrib_budget_bytes)
+                                  contrib_budget_bytes=contrib_budget_bytes,
+                                  contrib_pool=contrib_pool)
 
 
 @dataclass
@@ -170,11 +200,11 @@ class SnapshotVarArchive:
     def total_nbytes(self) -> int:
         return self.archive.total_nbytes
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None
-                    ) -> "_SnapshotVarReader":
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
+                    contrib_pool=None) -> "_SnapshotVarReader":
         # snapshot readers hold at most one decoded field; the contribution
-        # budget is a bitplane-reader concept and is accepted for interface
-        # uniformity only
+        # budget/pool is a bitplane-reader concept and is accepted for
+        # interface uniformity only
         return _SnapshotVarReader(self)
 
 
@@ -193,9 +223,10 @@ class Archive:
         n += sum(m.nbytes for m in self.masks.values())
         return n
 
-    def open(self, contrib_budget_bytes: Optional[int] = None
-             ) -> "RetrievalSession":
-        return RetrievalSession(self, contrib_budget_bytes=contrib_budget_bytes)
+    def open(self, contrib_budget_bytes: Optional[int] = None,
+             contrib_pool=None) -> "RetrievalSession":
+        return RetrievalSession(self, contrib_budget_bytes=contrib_budget_bytes,
+                                contrib_pool=contrib_pool)
 
     def n_elements(self, name: str) -> int:
         return int(np.prod(self.shapes[name]))
@@ -270,10 +301,17 @@ class _BitplaneVarReader:
     any budget, including zero.  ``contrib_stats`` is an optional external
     sink carrying the ``contrib_*`` counters (store-backed readers pass
     their fetcher's FetchStats so several readers aggregate into one view).
+
+    ``contrib_pool`` replaces the static cap with a server-wide
+    :class:`repro.serve.budget.ContribBudgetPool`: retention becomes a
+    borrow against one shared pool (hottest variables win), and slot
+    mutation moves under the pool's lock so cross-session reclaim is
+    race-free.  Spill/recompute semantics — and bit-identical outputs —
+    are unchanged; only WHICH levels stay resident becomes dynamic.
     """
 
     def __init__(self, var, contrib_budget_bytes: Optional[int] = None,
-                 contrib_stats=None):
+                 contrib_stats=None, contrib_pool=None):
         self.var = var
         self.streams = [LevelStream(src) for src in var.plane_sources()]
         self._recon: Optional[np.ndarray] = None
@@ -287,7 +325,10 @@ class _BitplaneVarReader:
         self._field_nbytes = int(np.prod(var.padded_shape)) * 8
         self.contrib_stats = contrib_stats if contrib_stats is not None \
             else ContribStats()
-        if contrib_budget_bytes is None:
+        self._pool = contrib_pool
+        if contrib_pool is not None:
+            self._resident_cap = ngroups    # the pool arbitrates dynamically
+        elif contrib_budget_bytes is None:
             self._resident_cap = ngroups
         else:
             self._resident_cap = min(
@@ -300,10 +341,21 @@ class _BitplaneVarReader:
         return [l for l, c in enumerate(self._contribs) if c is not None]
 
     def _note_resident(self, delta_fields: int) -> None:
-        st = self.contrib_stats
-        st.contrib_resident_bytes += delta_fields * self._field_nbytes
-        if st.contrib_resident_bytes > st.contrib_peak_bytes:
-            st.contrib_peak_bytes = st.contrib_resident_bytes
+        self.contrib_stats.contrib_note(
+            delta_bytes=delta_fields * self._field_nbytes)
+
+    def _pool_set_contrib(self, slot: int, value) -> None:
+        """Slot mutation for POOLED readers — called only by the pool, under
+        the pool's lock (deposit on retain, clear on reclaim/release), so a
+        refresh on one session and a reclaim driven by another can never
+        interleave half-way.  Residency accounting moves with the slot."""
+        had = self._contribs[slot] is not None
+        self._contribs[slot] = value
+        has = value is not None
+        if has and not had:
+            self._note_resident(+1)
+        elif had and not has:
+            self._note_resident(-1)
 
     def reconstruct_at_resolution(self, coarsen: int,
                                   eps: float) -> Tuple[np.ndarray, float]:
@@ -457,12 +509,21 @@ class _BitplaneVarReader:
                 if c is None and not stale[l]:
                     # planes did not move — an unbounded reader would have a
                     # cached field here; this rebuild is pure budget cost
-                    st.contrib_recomputes += 1
+                    st.contrib_note(recomputes=1)
                 c = self._compute_contrib(l)
                 self._contrib_fetched[l] = self.streams[l].fetched
             total += c
+            if self._pool is not None:
+                # pooled retention: borrow a field-sized lease against the
+                # server-wide pool.  The pool deposits into the slot under
+                # its own lock (reclaiming colder holdings of ANY session
+                # first); a denial means this field is hot enough to keep
+                # only at someone hotter's expense — spill it instead.
+                if not self._pool.retain(self, slot=l, level=l,
+                                         nbytes=self._field_nbytes, value=c):
+                    st.contrib_note(spills=1)
             # resident policy: keep the finest levels (low l), spill coarse
-            if l < self._resident_cap:
+            elif l < self._resident_cap:
                 if self._contribs[l] is None:
                     self._note_resident(+1)
                 self._contribs[l] = c
@@ -473,7 +534,7 @@ class _BitplaneVarReader:
                 if self._contribs[l] is not None:   # defensive: cap is static
                     self._note_resident(-1)
                     self._contribs[l] = None
-                st.contrib_spills += 1
+                st.contrib_note(spills=1)
         self._recon = unpad(total, self.var.orig_shape)
         self._dirty = False
 
@@ -489,6 +550,52 @@ class _BitplaneVarReader:
                                        self.var.levels))
             self._recon = unpad(rec, self.var.orig_shape)
             self._dirty = False
+
+    # -- serve-plane hooks (repro.serve.coalesce / budget) -------------------
+
+    def state_signature(self) -> Tuple[int, ...]:
+        """Decode state as the tuple of per-group fetched-plane counts.
+        Decoded values — and hence the reconstruction — are a pure function
+        of this signature (the invariant tests/test_incremental_recompose.py
+        asserts), which is what makes cross-session coalescing sound: two
+        readers with equal signatures reconstruct bit-identically."""
+        return tuple(s.fetched for s in self.streams)
+
+    def advance_to(self, eps: float) -> bool:
+        """Move every stream exactly as ``request(eps)`` would WITHOUT
+        recomposing — the coalescer's waiter path (the leader's fetch made
+        these planes cache-hot).  Returns True if any stream moved."""
+        moved = False
+        for s, budget in zip(self.streams, self._budgets(eps)):
+            if s.fetch_to_eps(budget):
+                moved = True
+                self._dirty = True
+        return moved
+
+    def adopt_reconstruction(self, recon: np.ndarray) -> None:
+        """Install an externally computed reconstruction for the CURRENT
+        decode state (coalescing fan-out).  Contribution slots whose plane
+        counts moved since they were cached are dropped — serving them from
+        a later refresh would desynchronize cache and decode state; the
+        slots that did not move stay valid (pure functions of unchanged
+        values)."""
+        for l in range(self.var.levels + 1):
+            if self._contrib_fetched[l] != self.streams[l].fetched:
+                if self._contribs[l] is not None:
+                    if self._pool is not None:
+                        self._pool.release(self, l)   # clears slot + counts
+                    else:
+                        self._note_resident(-1)
+                        self._contribs[l] = None
+                self._contrib_fetched[l] = self.streams[l].fetched
+        self._recon = recon
+        self._dirty = False
+
+    def close(self) -> None:
+        """Return pooled leases (the serve plane closes sessions; a reader
+        without a pool has nothing to give back)."""
+        if self._pool is not None:
+            self._pool.release_owner(self)
 
 
 class _SnapshotVarReader:
@@ -510,16 +617,23 @@ class RetrievalSession:
 
     ``contrib_budget_bytes`` is a *per-variable* cap on each bitplane
     reader's retained contribution cache (None = unbounded); see the module
-    docstring for the spill/recompute semantics."""
+    docstring for the spill/recompute semantics.  ``contrib_pool`` is the
+    serve plane's shared :class:`repro.serve.budget.ContribBudgetPool`
+    alternative; ``coalescer`` (assignable after construction) routes
+    ``reconstruct`` through cross-session single-flight."""
 
-    def __init__(self, archive, contrib_budget_bytes: Optional[int] = None):
+    def __init__(self, archive, contrib_budget_bytes: Optional[int] = None,
+                 contrib_pool=None):
         self.archive = archive
         self.contrib_budget_bytes = contrib_budget_bytes
+        self.contrib_pool = contrib_pool
+        self.coalescer = None
         self.readers: Dict[str, object] = {}
         self._mask_charged: Dict[str, bool] = {}
         for name, var in archive.variables.items():
             self.readers[name] = var.open_reader(
-                contrib_budget_bytes=contrib_budget_bytes)
+                contrib_budget_bytes=contrib_budget_bytes,
+                contrib_pool=contrib_pool)
             self._mask_charged[name] = False
         self._mask_bytes = 0
         # How many reassign_eb reduction steps ahead the retrieval loop may
@@ -581,8 +695,14 @@ class RetrievalSession:
 
     def reconstruct(self, name: str, eps: float) -> Tuple[np.ndarray, float]:
         """Reconstruct variable to L-inf bound <= eps; returns the data (with
-        outlier-masked points exact) and the achieved bound."""
-        data, achieved = self.readers[name].request(eps)
+        outlier-masked points exact) and the achieved bound.  With a
+        ``coalescer`` attached (serve plane), concurrent duplicate requests
+        across sessions collapse into one fetch + recompose — bit-identical
+        results by the plane-count invariant."""
+        if self.coalescer is not None:
+            data, achieved = self.coalescer.reconstruct(self, name, eps)
+        else:
+            data, achieved = self.readers[name].request(eps)
         mask = self.archive.masks.get(name)
         if mask is not None:
             if not self._mask_charged[name]:
@@ -611,6 +731,15 @@ class RetrievalSession:
         if mask is not None:
             eb[mask.mask] = 0.0
         return eb
+
+    def close(self) -> None:
+        """Release per-reader resources (pooled contribution leases).  The
+        serve plane calls this when it retires a sticky session; in-memory
+        sessions without a pool have nothing to release."""
+        for r in self.readers.values():
+            close = getattr(r, "close", None)
+            if close is not None:
+                close()
 
     def bitrate(self, names: Optional[Sequence[str]] = None) -> float:
         """Bits per element over the referenced variables (paper §III-C)."""

@@ -1,34 +1,52 @@
-"""Batched progressive-retrieval service — the paper's serving shape.
+"""Concurrent progressive-retrieval service — the paper's serving shape.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 16
     PYTHONPATH=src python -m repro.launch.serve --store /data/ge.prs
     PYTHONPATH=src python -m repro.launch.serve --store /data/ge_dir --shard-by variable
     PYTHONPATH=src python -m repro.launch.serve --store http://host:8000/manifest.json
+    PYTHONPATH=src python -m repro.launch.serve --store /data/ge.prs \
+        --workers 8 --queue-depth 64 --pool-mb 64 --metrics-port 9100
 
-Simulates the production deployment of Fig 1: data is refactored once into
-progressive archives ("storage"); a stream of analysis requests arrives,
-each naming QoIs + tolerances; the server runs Algorithm 2 per session and
-answers with guaranteed-error reconstructions. Sessions are sticky, so a
+The production deployment of Fig 1: data is refactored once into
+progressive archives ("storage"); many analysis clients pull
+guaranteed-error reconstructions concurrently.  Sessions are sticky, so a
 client tightening its tolerance pays only for the new segments (the
 incremental-recomposition contract).
 
+Requests run on a bounded worker pool (``repro.serve.pool``) with
+per-session locking and load shedding; concurrent duplicate tighten
+requests coalesce across sessions into one fetch + one recompose
+(``repro.serve.coalesce`` — bit-identical fan-out by the plane-count
+invariant); and ``--pool-mb`` replaces the per-variable contribution
+budget with ONE server-wide borrow/return pool (``repro.serve.budget``)
+so the hottest variables keep their recompose state resident.
+``--metrics-port`` exposes /health and /metrics (plaintext counters:
+queue depth, p50/p99 handle latency, coalesce hits, cache/fetch/
+quarantine counters, pool occupancy) on ``repro.store.httpd``.
+
 With ``--store`` the server serves from an archive container (repro.store)
 instead of holding the refactored archive in RAM — a local ``.prs`` file
-(refactored + saved on first run if missing), a sharded directory
-(``--shard-by variable|group``), or an ``http(s)://`` URL of a container /
-sharded manifest published by ``repro.store.httpd``.  Segments stream
+(refactored + saved on first run if missing, exactly once even when two
+servers start on the same path: creation is serialized behind a lockfile
+and published by atomic rename), a sharded directory (``--shard-by
+variable|group``), or an ``http(s)://`` URL of a container / sharded
+manifest published by ``repro.store.httpd``.  Segments stream
 checksum-verified through the SegmentFetcher (ranged reads + async
 prefetch), and a cross-session `SegmentCache` sits under all client
 sessions: planes one client already pulled are served from RAM to every
-other client instead of re-fetched from the store.
+other client instead of re-fetched from the store (``--cache-admission``
+additionally skips *inserting* deep-LSB segments under pressure instead
+of evicting hot MSB prefixes moments before they are needed again).
 """
 from __future__ import annotations
 
 import argparse
 import os
+import shutil
+import tempfile
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -37,9 +55,12 @@ from repro.core import ge
 from repro.core.refactor import ContribStats, refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
+from repro.serve import (ContribBudgetPool, ReconstructCoalescer, ServePlane,
+                         ServerOverloadedError)
 from repro.store import (BlobQuarantine, RetryPolicy, SegmentCache,
                          open_archive, save_archive, save_sharded_archive)
 from repro.store.container import is_url
+from repro.store.httpd import StoreHTTPServer
 
 
 @dataclass
@@ -49,11 +70,97 @@ class Request:
     tau: float
 
 
+def ensure_archive(store_path: str, builder: Callable[[], object],
+                   shard_by: Optional[str] = None,
+                   stale_lock_s: float = 300.0,
+                   wait_timeout_s: float = 300.0,
+                   poll_s: float = 0.05) -> bool:
+    """Create the archive container at ``store_path`` exactly once across
+    racing processes; returns True when THIS call created it.
+
+    Two servers starting on the same missing path used to race
+    ``save_*_archive`` — each refactoring the fields and interleaving
+    writes into one half-written container.  Creation is now serialized
+    behind ``store_path + ".lock"`` (``O_CREAT|O_EXCL`` — the portable
+    atomic claim) and published by writing to a private ``.tmp.<pid>``
+    target followed by one atomic ``os.rename``: every other process
+    either sees no container (and waits on the lock) or the complete one,
+    never a prefix.  ``builder`` runs only in the winning process, so the
+    refactor itself also happens exactly once.  A lock older than
+    ``stale_lock_s`` is presumed crashed and broken; waiters give up with
+    ``TimeoutError`` after ``wait_timeout_s`` rather than hang a server
+    boot forever.
+    """
+    if is_url(store_path) or os.path.exists(store_path):
+        return False
+    lock_path = store_path + ".lock"
+    parent = os.path.dirname(os.path.abspath(store_path))
+    os.makedirs(parent, exist_ok=True)
+    deadline = time.monotonic() + wait_timeout_s
+    while True:
+        if os.path.exists(store_path):
+            return False                 # someone else finished the job
+        try:
+            fd = os.open(lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            try:
+                age = time.time() - os.path.getmtime(lock_path)
+            except OSError:
+                continue                 # lock released between EXCL and stat
+            if age > stale_lock_s:
+                # a crashed creator must not wedge every future boot
+                try:
+                    os.unlink(lock_path)
+                except OSError:
+                    pass
+                continue
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"timed out after {wait_timeout_s:.0f}s waiting for "
+                    f"{lock_path} (another process creating the archive?)")
+            time.sleep(poll_s)
+            continue
+        try:
+            os.write(fd, f"{os.getpid()}\n".encode())
+            os.close(fd)
+            if os.path.exists(store_path):
+                return False             # raced: winner finished before EXCL
+            tmp = f"{store_path}.tmp.{os.getpid()}"
+            try:
+                archive = builder()      # the refactor happens exactly once
+                if shard_by:
+                    save_sharded_archive(archive, tmp, shard_by=shard_by)
+                else:
+                    save_archive(archive, tmp)
+                os.rename(tmp, store_path)   # publish atomically
+            except BaseException:
+                if os.path.isdir(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
+                elif os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+            return True
+        finally:
+            try:
+                os.unlink(lock_path)
+            except OSError:
+                pass
+
+
 class RetrievalServer:
-    """``contrib_budget_bytes`` caps each session's per-variable contribution
-    cache (None = unbounded); ``cache_depth_weight`` / ``archive_floor_bytes``
-    tune the cross-session SegmentCache's depth-weighted eviction and
-    per-archive working-set floor (see repro.store.cache)."""
+    """Multi-tenant progressive-retrieval server.
+
+    ``contrib_budget_bytes`` caps each session's per-variable contribution
+    cache (None = unbounded); ``contrib_pool_bytes`` replaces it with one
+    server-wide borrow/return pool (``repro.serve.budget`` — takes
+    precedence when both are given).  ``cache_depth_weight`` /
+    ``archive_floor_bytes`` tune the cross-session SegmentCache's
+    depth-weighted eviction and per-archive working-set floor
+    (repro.store.cache); ``cache_admission`` skips inserting colder-than-
+    everything segments under pressure instead of churning the cache.
+    ``workers`` / ``queue_depth`` size the worker pool and its shedding
+    high-water mark; ``coalesce=False`` disables cross-session
+    single-flight (benchmark baseline)."""
 
     def __init__(self, fields, method: str = "hb",
                  store_path: Optional[str] = None,
@@ -63,22 +170,27 @@ class RetrievalServer:
                  archive_floor_bytes: int = 0,
                  contrib_budget_bytes: Optional[int] = None,
                  retry_policy: Optional[RetryPolicy] = None,
-                 quarantine: Optional[BlobQuarantine] = None):
+                 quarantine: Optional[BlobQuarantine] = None,
+                 workers: int = 8,
+                 queue_depth: int = 64,
+                 contrib_pool_bytes: Optional[int] = None,
+                 cache_admission: bool = False,
+                 coalesce: bool = True):
+        import threading
         t0 = time.time()
         self.cache: Optional[SegmentCache] = None
         self.contrib_budget_bytes = contrib_budget_bytes
+        self.contrib_pool = ContribBudgetPool(contrib_pool_bytes) \
+            if contrib_pool_bytes is not None else None
+        self.coalescer = ReconstructCoalescer() if coalesce else None
         if store_path is not None:
-            if not is_url(store_path) and not os.path.exists(store_path):
-                if shard_by:
-                    save_sharded_archive(
-                        refactor_variables(fields, method=method),
-                        store_path, shard_by=shard_by)
-                else:
-                    save_archive(refactor_variables(fields, method=method),
-                                 store_path)
+            ensure_archive(store_path,
+                           lambda: refactor_variables(fields, method=method),
+                           shard_by=shard_by)
             self.cache = SegmentCache(max_bytes=cache_bytes,
                                       depth_weight=cache_depth_weight,
-                                      archive_floor_bytes=archive_floor_bytes)
+                                      archive_floor_bytes=archive_floor_bytes,
+                                      admission_control=cache_admission)
             self.archive = open_archive(store_path, cache=self.cache,
                                         retry_policy=retry_policy,
                                         quarantine=quarantine)
@@ -93,14 +205,33 @@ class RetrievalServer:
         else:
             self.archive = refactor_variables(fields, method=method)
         self.sessions: Dict[str, object] = {}
+        self._sessions_mu = threading.Lock()
         self.refactor_s = time.time() - t0
         self.qois = ge.all_qois()
+        self.plane = ServePlane(self._handle, workers=workers,
+                                queue_depth=queue_depth,
+                                session_key=lambda req: req.client)
 
-    def handle(self, req: Request):
-        if req.client not in self.sessions:
-            self.sessions[req.client] = self.archive.open(
-                contrib_budget_bytes=self.contrib_budget_bytes)
-        session = self.sessions[req.client]
+    # -- request path --------------------------------------------------------
+
+    def _session(self, client: str):
+        """Sticky per-client session, created under a lock (two first
+        requests of one client may race through the pool)."""
+        with self._sessions_mu:
+            session = self.sessions.get(client)
+            if session is None:
+                session = self.archive.open(
+                    contrib_budget_bytes=self.contrib_budget_bytes,
+                    contrib_pool=self.contrib_pool)
+                session.coalescer = self.coalescer
+                self.sessions[client] = session
+        return session
+
+    def _handle(self, req: Request):
+        """One request, run inline on the calling thread (the worker body;
+        also the sequential baseline the concurrency bench compares
+        against).  Per-session serialization is the ServePlane's job."""
+        session = self._session(req.client)
         before = session.bytes_retrieved
         reqs = [QoIRequest(q, self.qois[q], req.tau) for q in req.qois]
         t0 = time.time()
@@ -112,6 +243,82 @@ class RetrievalServer:
                 "est_errors": res.est_errors,
                 "degraded": res.degraded,
                 "availability": res.availability}
+
+    # kept as the documented single-threaded entry point: the concurrency
+    # benchmark's sequential baseline, and any embedder that wants to own
+    # its own threading
+    handle_inline = _handle
+
+    def handle(self, req: Request):
+        """Concurrent entry point: submit to the worker pool and wait.
+        Raises :class:`repro.serve.ServerOverloadedError` when shedding."""
+        return self.plane.handle(req)
+
+    def submit(self, req: Request):
+        """Async entry point: a Future, or ServerOverloadedError at the
+        door when the pending queue is past the high-water mark."""
+        return self.plane.submit(req)
+
+    # -- observability -------------------------------------------------------
+
+    def health(self) -> Dict[str, object]:
+        return self.plane.health()
+
+    def metrics(self) -> Dict[str, float]:
+        """One flat counter dict for /metrics: pool, coalescer, budget
+        pool, segment cache, fetcher (transport + contrib + fault
+        counters) — everything a dashboard needs to see a multi-tenant
+        server breathe."""
+        out = {f"serve_{k}": v for k, v in self.plane.metrics().items()}
+        with self._sessions_mu:
+            out["serve_sessions_sticky"] = float(len(self.sessions))
+        if self.coalescer is not None:
+            for k, v in self.coalescer.metrics().items():
+                out[f"coalesce_{k}"] = v
+        if self.contrib_pool is not None:
+            for k, v in self.contrib_pool.metrics().items():
+                out[f"pool_{k}"] = v
+        if self.cache is not None:
+            cs = self.cache.stats
+            out.update({
+                "cache_hits_total": float(cs.hits),
+                "cache_misses_total": float(cs.misses),
+                "cache_insertions_total": float(cs.insertions),
+                "cache_evictions_total": float(cs.evictions),
+                "cache_floor_protected_total": float(cs.floor_protected),
+                "cache_admission_skips_total": float(cs.admission_skips),
+                "cache_resident_bytes": float(self.cache.nbytes),
+            })
+        fetcher = getattr(self.archive, "fetcher", None)
+        if fetcher is not None:
+            st = fetcher.stats
+            out.update({
+                "fetch_store_reads_total": float(st.store_reads),
+                "fetch_cache_hits_total": float(st.cache_hits),
+                "fetch_bytes_total": float(st.bytes_fetched),
+                "fetch_demand_total": float(st.demand_fetches),
+                "fetch_prefetch_hits_total": float(st.prefetch_hits),
+                "fetch_retries_total": float(st.retries),
+                "fetch_faults_absorbed_total": float(st.faults_absorbed),
+                "fetch_quarantined_blobs_total": float(st.quarantined_blobs),
+                "contrib_resident_bytes": float(st.contrib_resident_bytes),
+                "contrib_peak_bytes": float(st.contrib_peak_bytes),
+                "contrib_spills_total": float(st.contrib_spills),
+                "contrib_recomputes_total": float(st.contrib_recomputes),
+            })
+        return out
+
+    def close(self) -> None:
+        """Drain the pool, release pooled leases, close the store."""
+        self.plane.shutdown(wait=True)
+        with self._sessions_mu:
+            sessions, self.sessions = dict(self.sessions), {}
+        for s in sessions.values():
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
+        if getattr(self.archive, "fetcher", None) is not None:
+            self.archive.close()
 
 
 def main(argv=None) -> int:
@@ -128,6 +335,25 @@ def main(argv=None) -> int:
                     help="when creating a missing --store, write a sharded "
                          "directory (one payload blob per variable / level "
                          "group) instead of a single file")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="serve-plane worker threads (requests for "
+                         "different clients run concurrently; 1 recovers "
+                         "the sequential server)")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="max outstanding requests before the server sheds "
+                         "load (503 + Retry-After past the high-water mark)")
+    ap.add_argument("--pool-mb", type=float, default=None,
+                    help="server-wide pooled contribution budget (MiB) "
+                         "shared by ALL sessions — replaces --contrib-mb; "
+                         "the hottest variables keep their recompose state "
+                         "resident (default: off)")
+    ap.add_argument("--cache-admission", action="store_true",
+                    help="under cache pressure, skip inserting segments "
+                         "colder than everything resident (deep-LSB churn "
+                         "control) instead of evicting hot MSB prefixes")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose /health and /metrics (plaintext counters) "
+                         "on this port")
     ap.add_argument("--cache-mb", type=int, default=256,
                     help="cross-session segment cache budget (MiB)")
     ap.add_argument("--cache-depth-weight", type=float, default=64.0,
@@ -141,7 +367,8 @@ def main(argv=None) -> int:
                     help="per-variable contribution-cache budget (MiB) for "
                          "each session's bitplane readers; coarse-level "
                          "fields spill and are recomputed on demand "
-                         "(default: unbounded)")
+                         "(default: unbounded; see --pool-mb for the "
+                         "server-wide pooled alternative)")
     ap.add_argument("--retry-attempts", type=int, default=None,
                     help="max fetch attempts per segment, counting the "
                          "first try (default: RetryPolicy's 4; 1 disables "
@@ -168,6 +395,8 @@ def main(argv=None) -> int:
     fields = ge_like_fields(n=args.n, seed=0)
     contrib_budget = None if args.contrib_mb is None \
         else int(args.contrib_mb * (1 << 20))
+    contrib_pool = None if args.pool_mb is None \
+        else int(args.pool_mb * (1 << 20))
     retry_policy = None
     if (args.retry_attempts is not None or args.retry_backoff_ms is not None
             or args.fetch_deadline_s is not None):
@@ -188,29 +417,55 @@ def main(argv=None) -> int:
                              archive_floor_bytes=args.archive_floor_mb << 20,
                              contrib_budget_bytes=contrib_budget,
                              retry_policy=retry_policy,
-                             quarantine=quarantine)
+                             quarantine=quarantine,
+                             workers=args.workers,
+                             queue_depth=args.queue_depth,
+                             contrib_pool_bytes=contrib_pool,
+                             cache_admission=args.cache_admission)
     src = f"store {args.store}" if args.store else "in-memory archive"
     print(f"[server] {src} ready for {args.n} pts x5 vars in "
           f"{server.refactor_s:.2f}s "
-          f"(archive {server.archive.total_nbytes / 2**20:.2f} MiB)")
+          f"(archive {server.archive.total_nbytes / 2**20:.2f} MiB); "
+          f"{args.workers} workers, queue depth {args.queue_depth}")
     if args.store:
         at_rest = server.archive.codec_bytes()
         print("[server] archive codecs: " + ", ".join(
             f"{name}={nb}B" for name, nb in
             sorted(at_rest.items(), key=lambda kv: -kv[1])))
+    httpd = None
+    if args.metrics_port is not None:
+        root = args.store if args.store and not is_url(args.store) \
+            and os.path.exists(args.store) \
+            else tempfile.mkdtemp(prefix="repro-metrics-")
+        httpd = StoreHTTPServer(os.path.abspath(root),
+                                port=args.metrics_port,
+                                metrics_source=server.metrics,
+                                health_source=server.health).start()
+        print(f"[server] /health + /metrics at {httpd.url}")
 
     rng = np.random.default_rng(0)
     clients = [f"client{i}" for i in range(4)]
     qoi_names = list(ge.all_qois())
+    requests = [Request(client=str(rng.choice(clients)),
+                        qois=list(rng.choice(qoi_names,
+                                             size=rng.integers(1, 4),
+                                             replace=False)),
+                        tau=float(10.0 ** -rng.integers(1, 6)))
+                for _ in range(args.requests)]
+    # submit the whole stream through the worker pool, backing off when the
+    # server sheds — the shape a well-behaved client fleet has
+    futures = []
+    for i, req in enumerate(requests):
+        while True:
+            try:
+                futures.append((i, req, server.submit(req)))
+                break
+            except ServerOverloadedError as e:
+                time.sleep(min(e.retry_after_s, 0.25))
     total_bytes = 0
     degraded_vars: Dict[str, object] = {}
-    for i in range(args.requests):
-        req = Request(client=str(rng.choice(clients)),
-                      qois=list(rng.choice(qoi_names,
-                                           size=rng.integers(1, 4),
-                                           replace=False)),
-                      tau=float(10.0 ** -rng.integers(1, 6)))
-        out = server.handle(req)
+    for i, req, fut in futures:
+        out = fut.result()
         total_bytes += out["bytes_moved"]
         flag = " DEGRADED" if out["degraded"] else ""
         print(f"[req {i:02d}] {req.client} qois={','.join(req.qois):18s} "
@@ -222,6 +477,17 @@ def main(argv=None) -> int:
     raw = sum(v.nbytes for v in fields.values())
     print(f"[server] total moved {total_bytes / 2**20:.2f} MiB vs raw "
           f"{raw / 2**20:.2f} MiB ({total_bytes / raw:.0%})")
+    pm = server.plane.metrics()
+    print(f"[server] plane: {pm['requests_total']:.0f} requests on "
+          f"{args.workers} workers, p50={pm['latency_p50_ms']:.1f}ms "
+          f"p99={pm['latency_p99_ms']:.1f}ms, {pm['shed_total']:.0f} shed")
+    if server.coalescer is not None:
+        cm = server.coalescer.metrics()
+        if cm["hits_total"]:
+            print(f"[server] coalesce: {cm['hits_total']:.0f} duplicate "
+                  f"requests shared {cm['leaders_total']:.0f} flights "
+                  f"({cm['adoptions_total']:.0f} adoptions, "
+                  f"{cm['fallbacks_total']:.0f} fallbacks)")
     if degraded_vars:
         print("[server] DEGRADED — some variables are pinned at the deepest "
               "available plane prefix; reported bounds stay certified:")
@@ -252,8 +518,16 @@ def main(argv=None) -> int:
                   f"from RAM ({cs.hits} hits / {cs.misses} misses, "
                   f"{server.cache.nbytes / 2**20:.2f} MiB resident, "
                   f"{cs.evictions} evicted, "
-                  f"{cs.floor_protected} floor-protected)")
-    if args.contrib_mb is not None:
+                  f"{cs.floor_protected} floor-protected, "
+                  f"{cs.admission_skips} admission-skipped)")
+    if server.contrib_pool is not None:
+        ps = server.contrib_pool.metrics()
+        print(f"[server] contrib pool: "
+              f"{ps['borrowed_bytes'] / 2**20:.2f} MiB borrowed "
+              f"(peak {ps['peak_borrowed_bytes'] / 2**20:.2f} MiB) over "
+              f"{ps['leases']:.0f} leases, {ps['denials_total']:.0f} denials"
+              f", {ps['reclaims_total']:.0f} reclaims")
+    if args.contrib_mb is not None or args.pool_mb is not None:
         if args.store:
             cst = server.archive.fetcher.stats
         else:                       # in-memory sessions: one sink per reader
@@ -265,8 +539,9 @@ def main(argv=None) -> int:
               f"(peak {cst.contrib_peak_bytes / 2**20:.2f} MiB), "
               f"{cst.contrib_spills} spills, "
               f"{cst.contrib_recomputes} recomputes")
-    if args.store:
-        server.archive.close()
+    if httpd is not None:
+        httpd.stop()
+    server.close()
     return 0
 
 

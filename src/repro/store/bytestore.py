@@ -119,6 +119,7 @@ class HTTPStats:
     bytes_moved: int = 0       # payload bytes received (incl. coalescing gaps)
     coalesced_ranges: int = 0  # ranges merged into a neighbour's request
     wasted_bytes: int = 0      # gap bytes transferred only to merge ranges
+    not_modified: int = 0      # conditional GETs answered 304 from our cache
 
 
 class HTTPByteStore(ByteStore):
@@ -174,6 +175,10 @@ class HTTPByteStore(ByteStore):
         # round-trip when the caller already knows the size (sharded
         # manifests record every blob's size) or only wants read_all()
         self._size: Optional[int] = None if size is None else int(size)
+        # conditional-GET state for read_all: the last full body plus the
+        # validator it arrived under (None until a server sends an ETag)
+        self._etag: Optional[str] = None
+        self._body_cache: Optional[bytes] = None
 
     # -- connection management ----------------------------------------------
 
@@ -269,12 +274,31 @@ class HTTPByteStore(ByteStore):
 
     def read_all(self) -> bytes:
         """One plain GET of the whole resource (no size probe, no Range) —
-        the cheap path for small metadata like a sharded manifest."""
-        status, _, body = self._request("GET", {})
+        the cheap path for small metadata like a sharded manifest.
+
+        Conditional on re-read: when the first GET carried an ``ETag``, the
+        body is kept and every later ``read_all`` revalidates with
+        ``If-None-Match`` — a ``304`` serves the cached body for the cost
+        of a header exchange.  This is the polling primitive a live
+        append-only archive needs: manifest unchanged -> no transfer,
+        manifest rewritten -> new ETag -> fresh body, never a stale mix."""
+        headers = {}
+        with self._stats_lock:
+            etag, cached = self._etag, self._body_cache
+        if etag is not None and cached is not None:
+            headers["If-None-Match"] = etag
+        status, resp_headers, body = self._request("GET", headers)
+        if status == 304:
+            with self._stats_lock:
+                self.stats.not_modified += 1
+            return cached
         if status != 200:
             raise IOError(f"GET {self.url}: HTTP {status}")
+        new_etag = {k.lower(): v for k, v in resp_headers.items()}.get("etag")
         with self._stats_lock:
             self.stats.bytes_moved += len(body)
+            self._etag = new_etag
+            self._body_cache = body if new_etag is not None else None
         if self._size is None:
             self._size = len(body)
         return body

@@ -49,6 +49,18 @@ its floor the inserting archive evicts itself, and the global
 
 Depth and archive default to ``0`` / ``""`` on ``put``, so callers that
 never learned the new metadata keep plain-LRU semantics unchanged.
+
+Admission control (serve plane)
+-------------------------------
+With ``admission_control=True`` a ``put`` that would overflow the cache
+first compares the incoming entry's score against the stalest resident
+entry: when the newcomer scores LOWER (a deep-LSB segment from one
+tight-tolerance client, up against a shared MSB prefix), inserting it
+would evict hotter bytes only to be evicted moments later itself — so the
+insert is *skipped* (``stats.admission_skips``) and the resident set is
+left alone.  Correctness is unaffected (the fetcher falls through to the
+ByteStore); this is purely churn avoidance under multi-tenant pressure.
+Default off: single-session workloads want every verified byte cached.
 """
 from __future__ import annotations
 
@@ -69,6 +81,8 @@ class CacheStats:
     insertions: int = 0
     evictions: int = 0
     floor_protected: int = 0   # evictions redirected off an at-floor archive
+    admission_skips: int = 0   # inserts refused under pressure (colder than
+    #                            every resident entry; admission_control only)
 
 
 @dataclass(slots=True)
@@ -99,7 +113,8 @@ class SegmentCache:
     def __init__(self, max_bytes: int = 256 << 20,
                  depth_weight: float = 64.0,
                  archive_floor_bytes: int = 0,
-                 archive_max_bytes: Optional[int] = None):
+                 archive_max_bytes: Optional[int] = None,
+                 admission_control: bool = False):
         if max_bytes <= 0:
             raise ValueError(f"max_bytes must be positive, got {max_bytes}")
         if depth_weight < 0:
@@ -110,6 +125,7 @@ class SegmentCache:
         self.depth_weight = float(depth_weight)
         self.archive_floor_bytes = int(archive_floor_bytes)
         self.archive_max_bytes = archive_max_bytes
+        self.admission_control = bool(admission_control)
         self.stats = CacheStats()
         self._lock = threading.Lock()
         self._entries: Dict[Hashable, _Entry] = {}
@@ -180,6 +196,20 @@ class SegmentCache:
         self._remove(*victim)
         self.stats.evictions += 1
 
+    def _min_resident_score(self) -> Optional[float]:
+        """Lowest score among resident entries — scanning only band heads
+        (each queue head is its band's minimum tick).  Pure read: unlike
+        ``_victim`` it never touches the floor_protected stat, so the
+        admission check cannot masquerade as floor pressure."""
+        best: Optional[float] = None
+        for st in self._archives.values():
+            for q in st.bands.values():
+                entry = next(iter(q.values()))
+                score = self._score(entry)
+                if best is None or score < best:
+                    best = score
+        return best
+
     def _evict_within(self, archive: str) -> None:
         """Per-archive cap: evict the minimum-score entry of one archive."""
         st = self._archives.get(archive)
@@ -215,6 +245,19 @@ class SegmentCache:
             return                      # would evict everything for one entry
         with self._lock:
             old = self._entries.get(key)
+            if old is None and self.admission_control and \
+                    self._nbytes + len(data) > self.max_bytes:
+                band = min(max(int(depth), 0), _MAX_BAND)
+                floor = self._min_resident_score()
+                # the newcomer would enter at tick+1; if even then it scores
+                # below the stalest resident entry, inserting means evicting
+                # hotter bytes to hold a segment that loses the very next
+                # comparison — skip it and keep the resident set intact
+                # (a re-put of a resident key is a refresh, never admission)
+                if floor is not None and \
+                        (self._tick + 1) - self.depth_weight * band < floor:
+                    self.stats.admission_skips += 1
+                    return
             if old is not None:
                 self._remove(key, old)
             self._tick += 1

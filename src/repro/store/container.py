@@ -342,13 +342,14 @@ class StoreBitplaneVar:
         return [FetcherPlaneSource(self._fetcher, f"{self.name}/g{l}", meta)
                 for l, meta in enumerate(self.groups)]
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None
-                    ) -> _BitplaneVarReader:
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
+                    contrib_pool=None) -> _BitplaneVarReader:
         # the fetcher's FetchStats doubles as the ContribStats sink so one
         # object reports transport traffic AND reader residency/spills
         return _BitplaneVarReader(self,
                                   contrib_budget_bytes=contrib_budget_bytes,
-                                  contrib_stats=self._fetcher.stats)
+                                  contrib_stats=self._fetcher.stats,
+                                  contrib_pool=contrib_pool)
 
 
 class _SnapshotHandle:
@@ -496,8 +497,9 @@ class StoreSnapshotVar:
     def total_nbytes(self) -> int:
         return sum(h.nbytes for h in self.snapshots)
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None):
-        # contribution budgets are bitplane-reader state; accepted for
+    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
+                    contrib_pool=None):
+        # contribution budgets/pools are bitplane-reader state; accepted for
         # interface uniformity with the other variable kinds
         cls = _StoreDeltaSnapshotReader if self.delta else _StoreSnapshotReader
         return cls(self)
@@ -699,9 +701,11 @@ class StoreArchive:
         return int(np.prod(self.shapes[name]))
 
     def open(self, prefetch_depth: int = 1,
-             contrib_budget_bytes: Optional[int] = None) -> RetrievalSession:
+             contrib_budget_bytes: Optional[int] = None,
+             contrib_pool=None) -> RetrievalSession:
         session = RetrievalSession(self,
-                                   contrib_budget_bytes=contrib_budget_bytes)
+                                   contrib_budget_bytes=contrib_budget_bytes,
+                                   contrib_pool=contrib_pool)
         session.prefetch_depth = prefetch_depth
         return session
 

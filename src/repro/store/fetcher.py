@@ -124,6 +124,28 @@ class FetchStats:
     # manifest v3 codec field; "untagged" covers masks/snapshots and v1/v2
     # archives) — the on-the-wire view of the encoder's codec choices
     codec_bytes: Dict[str, int] = field(default_factory=dict)
+    # guards the contrib_* counters above: this object is the shared
+    # ContribStats sink for every store-backed reader of the archive, and
+    # under the serve plane those readers mutate from many worker threads —
+    # a bare += loses counts (and the peak high-water must see its own
+    # delta).  Same contrib_note/contrib_snapshot surface as ContribStats.
+    _mu: threading.Lock = field(default_factory=threading.Lock,
+                                repr=False, compare=False)
+
+    def contrib_note(self, delta_bytes: int = 0, spills: int = 0,
+                     recomputes: int = 0) -> None:
+        """Atomically apply a residency delta / spill / recompute event."""
+        with self._mu:
+            self.contrib_resident_bytes += delta_bytes
+            if self.contrib_resident_bytes > self.contrib_peak_bytes:
+                self.contrib_peak_bytes = self.contrib_resident_bytes
+            self.contrib_spills += spills
+            self.contrib_recomputes += recomputes
+
+    def contrib_snapshot(self) -> Tuple[int, int, int, int]:
+        with self._mu:
+            return (self.contrib_resident_bytes, self.contrib_peak_bytes,
+                    self.contrib_spills, self.contrib_recomputes)
 
     @property
     def hit_rate(self) -> float:

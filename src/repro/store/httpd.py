@@ -13,6 +13,17 @@ HTTP/1.1 connections, so `HTTPByteStore`'s connection reuse actually reuses.
 prefetch pool and demand path stream concurrently, like any real object
 store.  ``fault_injector`` lets tests inject transient failures (e.g. a 500
 on the first attempt) to exercise the client's retry/backoff path.
+
+Every file response (GET and HEAD) carries a weak-validator ``ETag``
+derived from ``(size, mtime_ns)``; a conditional GET with a matching
+``If-None-Match`` short-circuits to ``304 Not Modified`` — the
+revalidation primitive live append-only archives need (`HTTPByteStore`
+sends the validator on manifest re-reads, see repro.store.bytestore).
+
+When handed a ``metrics_source`` / ``health_source`` (the serve plane
+does), the server also answers ``GET /metrics`` with a plaintext counter
+dump and ``GET /health`` with 200/ok — or ``503`` plus a ``Retry-After``
+header while the serve plane is shedding load.
 """
 from __future__ import annotations
 
@@ -80,6 +91,50 @@ class _ArchiveHandler(BaseHTTPRequestHandler):
             self.send_header(k, v)
         self.end_headers()
 
+    def _endpoint(self, head_only: bool) -> bool:
+        """Serve /health and /metrics when the server carries sources for
+        them; returns True when the request was handled.  Routed before
+        file resolution, so an archive file literally named ``metrics``
+        is shadowed only on servers that enable the endpoints."""
+        route = self.path.split("?", 1)[0].rstrip("/")
+        if route == "/metrics":
+            source = self.server.metrics_source  # type: ignore[attr-defined]
+            if source is None:
+                return False
+            body = "".join(f"{k} {v:g}\n"
+                           for k, v in sorted(source().items()))
+            payload = body.encode()
+            self._respond(200, len(payload),
+                          {"Content-Type": "text/plain; charset=utf-8"})
+            if not head_only:
+                self.wfile.write(payload)
+            return True
+        if route == "/health":
+            source = self.server.health_source   # type: ignore[attr-defined]
+            if source is None:
+                return False
+            report = source()
+            ok = bool(report.get("ok", True))
+            extra = {"Content-Type": "text/plain; charset=utf-8"}
+            if not ok and report.get("retry_after_s"):
+                # shedding: tell well-behaved clients when to come back
+                extra["Retry-After"] = \
+                    str(max(1, int(report["retry_after_s"])))
+            payload = (b"ok\n" if ok else b"overloaded\n")
+            self._respond(200 if ok else 503, len(payload), extra)
+            if not head_only:
+                self.wfile.write(payload)
+            return True
+        return False
+
+    @staticmethod
+    def _etag(path: str) -> str:
+        """Weak validator from (size, mtime_ns): changes whenever the file
+        is rewritten — exactly the signal a live-archive client needs to
+        drop its cached manifest."""
+        st = os.stat(path)
+        return f'"{st.st_size:x}-{st.st_mtime_ns:x}"'
+
     def _serve(self, head_only: bool) -> None:
         injector = self.server.fault_injector  # type: ignore[attr-defined]
         if injector is not None:
@@ -89,11 +144,20 @@ class _ArchiveHandler(BaseHTTPRequestHandler):
                     self.server.stats["faults"] += 1
                 self._respond(status, 0)
                 return
+        if self._endpoint(head_only):
+            return
         path = self._resolve()
         if path is None:
             self._respond(404, 0)
             return
         size = os.path.getsize(path)
+        etag = self._etag(path)
+        if self._matches(self.headers.get("If-None-Match"), etag):
+            with self.server.stats_lock:       # type: ignore[attr-defined]
+                self.server.stats["requests"] += 1
+                self.server.stats["not_modified"] += 1
+            self._respond(304, 0, {"ETag": etag})
+            return
         rng_header = self.headers.get("Range")
         rng = None
         if rng_header:
@@ -110,8 +174,9 @@ class _ArchiveHandler(BaseHTTPRequestHandler):
             self.server.stats["bytes_sent"] += 0 if head_only else length
             if rng is not None:
                 self.server.stats["range_requests"] += 1
-        extra = ({"Content-Range": f"bytes {start}-{end}/{size}"}
-                 if rng is not None else None)
+        extra = {"ETag": etag}
+        if rng is not None:
+            extra["Content-Range"] = f"bytes {start}-{end}/{size}"
         self._respond(206 if rng is not None else 200, length, extra)
         if head_only or length == 0:
             return
@@ -124,6 +189,18 @@ class _ArchiveHandler(BaseHTTPRequestHandler):
                     break
                 self.wfile.write(chunk)
                 remaining -= len(chunk)
+
+    @staticmethod
+    def _matches(if_none_match: Optional[str], etag: str) -> bool:
+        """RFC 9110 §13.1.2 weak comparison over a comma-separated
+        candidate list; ``*`` matches any current representation."""
+        if not if_none_match:
+            return False
+        if if_none_match.strip() == "*":
+            return True
+        candidates = [c.strip().removeprefix("W/")
+                      for c in if_none_match.split(",")]
+        return etag in candidates
 
     def do_GET(self) -> None:           # noqa: N802 (http.server API)
         self._serve(head_only=False)
@@ -145,13 +222,19 @@ class StoreHTTPServer(ThreadingHTTPServer):
     def __init__(self, root: str, host: str = "127.0.0.1", port: int = 0,
                  fault_injector: Optional[
                      Callable[[BaseHTTPRequestHandler], int]] = None,
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 metrics_source: Optional[Callable[[], dict]] = None,
+                 health_source: Optional[Callable[[], dict]] = None):
         super().__init__((host, port), _ArchiveHandler)
         self.root = root
         self.fault_injector = fault_injector
         self.verbose = verbose
+        # serve-plane observability: /metrics renders the counter dict,
+        # /health maps {"ok": bool, "retry_after_s": float} to 200/503
+        self.metrics_source = metrics_source
+        self.health_source = health_source
         self.stats = {"requests": 0, "range_requests": 0, "bytes_sent": 0,
-                      "faults": 0}
+                      "faults": 0, "not_modified": 0}
         self.stats_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
 

@@ -226,6 +226,10 @@ def test_workflow_commands_are_runnable_here():
     # ... and so are the robustness rows (retry/fault-injection overhead)
     assert "--only store,entropy,robust" in joined
     assert "--prefix robust/" in joined
+    # ... and the concurrent serve-plane rows (worker pool + coalescing
+    # speedup, tail amplification) ride the same gate
+    assert "--only store,entropy,robust,serve" in joined
+    assert "--prefix serve/" in joined
     assert "python -m tools.check_links README.md docs" in joined
     # CI must stay one-sided/loose: the committed baseline is not recorded
     # on the runner class (two-sided 1.5x is the local invocation)
@@ -237,6 +241,24 @@ def test_workflow_commands_are_runnable_here():
     for mod in ("benchmarks.run", "benchmarks.check_regression",
                 "tools.check_links", "pytest"):
         assert importlib.util.find_spec(mod) is not None, mod
+
+
+def test_serve_bench_and_smoke_ride_the_pipeline():
+    """The serve-plane bench is part of the full harness run (its rows land
+    in BENCH_kernels.json) and the concurrent-serve suite — including the
+    /health + /metrics HTTP smoke test — runs on every tier-1 leg."""
+    from benchmarks.run import MODULES
+    assert "bench_serve_concurrent" in MODULES
+    assert os.path.exists(
+        os.path.join(REPO, "benchmarks", "bench_serve_concurrent.py"))
+    path = os.path.join(REPO, "tests", "test_serve_concurrent.py")
+    assert os.path.exists(path)
+    with open(path, encoding="utf-8") as fh:
+        src = fh.read()
+    assert "mark.slow" not in src, \
+        "test_serve_concurrent.py must stay in the tier-1 (not-slow) " \
+        "selection"
+    assert "def test_health_and_metrics_endpoints_under_concurrency" in src
 
 
 def test_codec_conformance_suite_rides_in_tier1():
