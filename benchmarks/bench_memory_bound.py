@@ -18,6 +18,7 @@ import numpy as np
 
 from benchmarks.common import timed
 from repro.core.refactor import refactor_variables
+from repro.options import SessionOptions
 from repro.data.synthetic import ge_like_fields
 
 _N = 1 << 15
@@ -28,7 +29,7 @@ _REPEAT = 3          # fresh warmed session per repeat; report the min
 
 
 def _warm_session(arch, budget):
-    s = arch.open(contrib_budget_bytes=budget)
+    s = arch.open(SessionOptions.memory_bounded(budget))
     for eps in _WARM_LADDER:
         for v in _VARS:
             s.reconstruct(v, eps)

@@ -1,11 +1,13 @@
 """Store subsystem micro-benches: container round-trip throughput, segment
 fetch latency (cold demand vs warm prefetched), HTTP ranged-GET transport
 over loopback (validating the RemoteByteStore link model against a real
-socket), cross-session cache hit economics, and crc32c hashing rate — the
-transport-path numbers tracked across PRs in BENCH_kernels.json."""
+socket), cross-session cache hit economics, live-archive append throughput
+/ follow-mode latency / delta wire economics, and crc32c hashing rate —
+the transport-path numbers tracked across PRs in BENCH_kernels.json."""
 from __future__ import annotations
 
 import os
+import shutil
 import tempfile
 import time
 
@@ -14,9 +16,11 @@ import numpy as np
 from benchmarks.common import timed
 from repro.core.refactor import refactor_variables
 from repro.data.synthetic import ge_like_fields
+from repro.options import OpenOptions
 from repro.store import (HTTPByteStore, SegmentCache, crc32c, open_archive,
                          save_archive)
 from repro.store.httpd import StoreHTTPServer
+from repro.store.writer import ArchiveWriter
 
 
 def run():
@@ -56,7 +60,7 @@ def run():
         sa.close()
 
         # demand vs prefetched single-segment latency (file store, no link)
-        sa = open_archive(path, prefetch_workers=2)
+        sa = open_archive(path, OpenOptions(prefetch_workers=2))
         keys = sorted(sa.fetcher.index, key=lambda k: -sa.fetcher.index[k].size)
         demand = min(timed(sa.fetcher.fetch, keys[0])[0] for _ in range(5))
         sa.fetcher.prefetch([keys[1]])
@@ -84,7 +88,8 @@ def run():
         with StoreHTTPServer(path) as srv:
             hs = HTTPByteStore(srv.url)
             cache = SegmentCache()
-            with open_archive(hs, prefetch_workers=2, cache=cache) as ha:
+            with open_archive(hs, OpenOptions(prefetch_workers=2,
+                                              cache=cache)) as ha:
                 t0 = time.perf_counter()
                 s1 = ha.open()
                 for eps in (1e-2, 1e-4, 1e-6):
@@ -117,6 +122,56 @@ def run():
     finally:
         if os.path.exists(path):
             os.unlink(path)
+
+    # -- live v4 archive: append throughput, follow-mode latency, and the
+    # delta-vs-keyframe wire economics that justify the journal
+    tmpdir = tempfile.mkdtemp(prefix="bench_live_")
+    try:
+        live = os.path.join(tmpdir, "arch")
+        n_t, base = 8, fields["Vx"]
+        frames = [np.asarray(base * (1.0 + 0.02 * k), dtype=base.dtype)
+                  for k in range(n_t + 1)]
+        w = ArchiveWriter.create(live, keyframe_interval=4)
+        t0 = time.perf_counter()
+        for f in frames[:n_t]:
+            w.append({"T": f}, eps=1e-3)
+        dt_append = time.perf_counter() - t0
+        raw = base.nbytes * n_t
+        rows.append(("store/append_throughput", dt_append / n_t * 1e6,
+                     f"timesteps={n_t};"
+                     f"raw_MBps={raw / dt_append / 1e6:.0f}"))
+
+        # delta vs independent wire bytes, straight from the live manifest
+        sa = open_archive(live)
+        var = sa.variables["T"]
+        key_b = [var.handle(t).nbytes for t in range(n_t)
+                 if var.handle(t).keyframe]
+        del_b = [var.handle(t).nbytes for t in range(n_t)
+                 if not var.handle(t).keyframe]
+        mean_k = sum(key_b) / len(key_b)
+        mean_d = sum(del_b) / len(del_b)
+        rows.append(("store/append_delta_bytes", mean_d,
+                     f"keyframe_bytes={mean_k:.0f};"
+                     f"ratio={mean_d / mean_k:.2f}"))
+
+        # follow-mode latency: one new append -> poll (journal re-read +
+        # replay) + chained delta decode of the new timestep
+        st = sa.open()
+        stream = st.follow("T")
+        for t in stream.poll():
+            stream.read(t)
+        w.append({"T": frames[n_t]}, eps=1e-3)
+        t0 = time.perf_counter()
+        (new_t,) = stream.poll()
+        stream.read(new_t)
+        dt_follow = time.perf_counter() - t0
+        rows.append(("store/follow_latency", dt_follow * 1e6,
+                     f"t={new_t};"
+                     f"bytes={var.handle(new_t).nbytes}"))
+        sa.close()
+        w.close()
+    finally:
+        shutil.rmtree(tmpdir, ignore_errors=True)
 
     buf = np.random.default_rng(0).integers(
         0, 256, 1 << 22, dtype=np.uint8).tobytes()

@@ -35,6 +35,7 @@ from repro.core import ge
 from repro.core.refactor import refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
+from repro.options import OpenOptions
 from repro.store import FileByteStore, HTTPByteStore, RemoteByteStore, \
     open_archive, save_archive
 from repro.store.httpd import StoreHTTPServer
@@ -82,7 +83,7 @@ def run():
 def _remote_retrieval(path, tau, workers):
     remote = RemoteByteStore(FileByteStore(path), latency_s=LINK_LATENCY,
                              bandwidth_bps=BW_EFF)
-    with open_archive(remote, prefetch_workers=workers) as sa:
+    with open_archive(remote, OpenOptions(prefetch_workers=workers)) as sa:
         session = sa.open()
         t0 = time.perf_counter()
         res = retrieve_qoi_controlled(session,
@@ -123,7 +124,7 @@ def _store_rows():
         # model and the HTTP backend disagree only in wall time
         with StoreHTTPServer(path) as srv:
             hs = HTTPByteStore(srv.url)
-            with open_archive(hs, prefetch_workers=4) as ha:
+            with open_archive(hs, OpenOptions(prefetch_workers=4)) as ha:
                 session = ha.open()
                 t0 = time.perf_counter()
                 res = retrieve_qoi_controlled(

@@ -6,5 +6,76 @@ Subpackages:
   models / configs / data                     architecture zoo + pipelines
   train / launch                              distributed substrate
   kernels                                     Pallas TPU kernels
+
+Top-level API (lazily resolved, so ``import repro`` stays cheap):
+
+    archive = repro.refactor(fields, method="hb")       # Algorithm 1
+    repro.save_archive(archive, "ge.prs")               # one-shot container
+
+    a = repro.open("ge.prs", repro.OpenOptions.default())
+    with a.open(repro.SessionOptions.memory_bounded(64 << 20)) as s: ...
+
+    w = repro.ArchiveWriter.create("live_dir")          # live v4 archive
+    w.append({"Vx": frame}, eps=1e-3); ...; w.seal()
+
+``repro.open`` is ``repro.store.open_archive``; the option objects are the
+unified opener/session surface (see ``repro.options``).
 """
 __version__ = "1.0.0"
+
+__all__ = [
+    "open",
+    "open_archive",
+    "refactor",
+    "ArchiveWriter",
+    "ensure_archive",
+    "save_archive",
+    "save_sharded_archive",
+    "memory_store_archive",
+    "OpenOptions",
+    "SessionOptions",
+    "ReproDeprecationWarning",
+    "StoreArchive",
+    "RetrievalSession",
+    "FollowStream",
+    "SegmentCache",
+    "RetryPolicy",
+    "BlobQuarantine",
+]
+
+# name -> "module:attr"; resolved on first attribute access (PEP 562) so the
+# bare package import pulls in neither numpy-heavy codec modules nor jax
+_LAZY = {
+    "open": "repro.store.container:open_archive",
+    "open_archive": "repro.store.container:open_archive",
+    "refactor": "repro.core.refactor:refactor_variables",
+    "ArchiveWriter": "repro.store.writer:ArchiveWriter",
+    "ensure_archive": "repro.store.writer:ensure_archive",
+    "save_archive": "repro.store.container:save_archive",
+    "save_sharded_archive": "repro.store.container:save_sharded_archive",
+    "memory_store_archive": "repro.store.container:memory_store_archive",
+    "OpenOptions": "repro.options:OpenOptions",
+    "SessionOptions": "repro.options:SessionOptions",
+    "ReproDeprecationWarning": "repro.options:ReproDeprecationWarning",
+    "StoreArchive": "repro.store.container:StoreArchive",
+    "RetrievalSession": "repro.core.refactor:RetrievalSession",
+    "FollowStream": "repro.core.refactor:FollowStream",
+    "SegmentCache": "repro.store.cache:SegmentCache",
+    "RetryPolicy": "repro.store.retry:RetryPolicy",
+    "BlobQuarantine": "repro.store.retry:BlobQuarantine",
+}
+
+
+def __getattr__(name):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    modname, attr = target.split(":")
+    value = getattr(importlib.import_module(modname), attr)
+    globals()[name] = value          # cache: resolve each name once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -10,6 +10,16 @@ DeltaSnapshotArchive (PSZ3-delta, after Magri & Lindstrom): snapshot i
 compresses the *residual* against the reconstruction from snapshots < i, so
 a request for ε* fetches all first i snapshots but shares bytes across
 requests. decoded_i = Σ_{j<=i} decode_j, with |x - decoded_i|_inf <= ε_i.
+
+Timestep deltas (manifest v4 live archives): ``encode_timestep`` /
+``decode_timestep`` apply the same residual idea along the TIME axis.  A
+keyframe compresses the field independently; a delta timestep compresses
+x_k − rec_{k−1} against the previous timestep's *reconstruction* (not its
+raw values), so the per-timestep bound is ε_k plus float accumulation
+slack — independent of chain length — and temporal sparsity between
+adjacent snapshots is what the entropy stage sees.  Rolling retention can
+drop any keyframe-aligned prefix without touching later timesteps'
+decodability.
 """
 from __future__ import annotations
 
@@ -34,6 +44,44 @@ def select_snapshot(snapshots: Sequence, eps: float) -> int:
         if s.eps <= eps:
             return i
     return len(snapshots) - 1
+
+
+def encode_timestep(x: np.ndarray, eps: float,
+                    prev_recon: Optional[np.ndarray] = None
+                    ) -> Tuple[SZCompressed, np.ndarray]:
+    """Encode one appended timestep; returns ``(snap, recon)``.
+
+    With ``prev_recon=None`` this is a KEYFRAME — the field compressed
+    independently.  Otherwise the residual ``x - prev_recon`` is compressed
+    (the delta path), and ``recon = prev_recon + decode(snap)`` satisfies
+    ``|x - recon|_inf <= eps`` by the SZ quantiser guarantee on the
+    residual — the error does not compound along the chain because each
+    delta is taken against the previous *reconstruction*.  The returned
+    ``recon`` is the writer's decode-side state for the next delta, bitwise
+    what any reader decodes for this timestep."""
+    x = np.asarray(x, dtype=np.float64)
+    if prev_recon is None:
+        snap = sz_compress(x, eps)
+        return snap, sz_decompress(snap)
+    snap = sz_compress(x - prev_recon, eps)
+    return snap, prev_recon + sz_decompress(snap)
+
+
+def decode_timestep(snap: SZCompressed,
+                    prev_recon: Optional[np.ndarray] = None) -> np.ndarray:
+    """Decode one timestep: keyframes stand alone, deltas add onto the
+    previous timestep's reconstruction (must be the chain predecessor)."""
+    delta = sz_decompress(snap)
+    return delta if prev_recon is None else prev_recon + delta
+
+
+def timestep_bound(eps: float, amax_chain: Sequence[float]) -> float:
+    """Certified L-inf bound for a timestep decoded through a keyframe→delta
+    chain: the timestep's own eps plus float accumulation slack — one
+    rounding allowance per chain link, mirroring
+    ``DeltaSnapshotReader.achieved_bound``."""
+    amax = max(amax_chain) if len(amax_chain) else 0.0
+    return eps + 8 * np.finfo(np.float64).eps * amax * len(amax_chain)
 
 
 @dataclass

@@ -70,6 +70,7 @@ from repro.compressors.snapshots import (
     default_snapshot_eps,
 )
 from repro.core.masks import OutlierMask, build_zero_velocity_mask
+from repro.options import SessionOptions, _from_legacy
 from repro.transform.hierarchical import (
     decompose_hb,
     grid_levels,
@@ -82,6 +83,20 @@ from repro.transform.hierarchical import (
 from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
 
 METHODS = ("hb", "ob", "psz3", "psz3_delta")
+
+
+def _resolve_session_options(options: Optional[SessionOptions],
+                             legacy: dict, where: str) -> SessionOptions:
+    """Shared shim: an explicit SessionOptions wins; loose legacy kwargs
+    build one through the once-warning deprecation path; neither means the
+    defaults.  Mixing the two spellings is a hard error — silently merging
+    them would make the options object lie about what the session uses."""
+    if legacy:
+        if options is not None:
+            raise TypeError(f"{where}: pass either a SessionOptions object "
+                            f"or legacy keyword arguments, not both")
+        return _from_legacy(SessionOptions, legacy, where)
+    return options if options is not None else SessionOptions()
 
 
 @dataclass(frozen=True)
@@ -185,11 +200,13 @@ class BitplaneVarArchive:
         surface shared with store-backed variables (repro.store)."""
         return [InMemoryPlaneSource(g) for g in self.groups]
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
-                    contrib_pool=None) -> "_BitplaneVarReader":
-        return _BitplaneVarReader(self,
-                                  contrib_budget_bytes=contrib_budget_bytes,
-                                  contrib_pool=contrib_pool)
+    def open_reader(self, options: Optional[SessionOptions] = None,
+                    **legacy) -> "_BitplaneVarReader":
+        opts = _resolve_session_options(options, legacy,
+                                        "BitplaneVarArchive.open_reader")
+        return _BitplaneVarReader(
+            self, contrib_budget_bytes=opts.contrib_budget_bytes,
+            contrib_pool=opts.contrib_pool)
 
 
 @dataclass
@@ -200,11 +217,13 @@ class SnapshotVarArchive:
     def total_nbytes(self) -> int:
         return self.archive.total_nbytes
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
-                    contrib_pool=None) -> "_SnapshotVarReader":
+    def open_reader(self, options: Optional[SessionOptions] = None,
+                    **legacy) -> "_SnapshotVarReader":
         # snapshot readers hold at most one decoded field; the contribution
-        # budget/pool is a bitplane-reader concept and is accepted for
-        # interface uniformity only
+        # budget/pool is a bitplane-reader concept and is accepted (and
+        # validated) for interface uniformity only
+        _resolve_session_options(options, legacy,
+                                 "SnapshotVarArchive.open_reader")
         return _SnapshotVarReader(self)
 
 
@@ -223,10 +242,10 @@ class Archive:
         n += sum(m.nbytes for m in self.masks.values())
         return n
 
-    def open(self, contrib_budget_bytes: Optional[int] = None,
-             contrib_pool=None) -> "RetrievalSession":
-        return RetrievalSession(self, contrib_budget_bytes=contrib_budget_bytes,
-                                contrib_pool=contrib_pool)
+    def open(self, options: Optional[SessionOptions] = None,
+             **legacy) -> "RetrievalSession":
+        opts = _resolve_session_options(options, legacy, "Archive.open")
+        return RetrievalSession(self, opts)
 
     def n_elements(self, name: str) -> int:
         return int(np.prod(self.shapes[name]))
@@ -615,32 +634,31 @@ class RetrievalSession:
     in-memory `Archive` or a store-backed `repro.store.StoreArchive` — every
     variable builds its own reader via ``open_reader``).
 
-    ``contrib_budget_bytes`` is a *per-variable* cap on each bitplane
-    reader's retained contribution cache (None = unbounded); see the module
-    docstring for the spill/recompute semantics.  ``contrib_pool`` is the
-    serve plane's shared :class:`repro.serve.budget.ContribBudgetPool`
-    alternative; ``coalescer`` (assignable after construction) routes
-    ``reconstruct`` through cross-session single-flight."""
+    Session policy comes from a :class:`repro.options.SessionOptions`
+    (prefetch depth, per-variable contribution budget, shared contribution
+    pool — see its docstring); the pre-v4 loose kwargs still work through
+    the once-warning deprecation shim.  ``coalescer`` (assignable after
+    construction) routes ``reconstruct`` through cross-session
+    single-flight."""
 
-    def __init__(self, archive, contrib_budget_bytes: Optional[int] = None,
-                 contrib_pool=None):
+    def __init__(self, archive, options: Optional[SessionOptions] = None,
+                 **legacy):
+        opts = _resolve_session_options(options, legacy, "RetrievalSession")
         self.archive = archive
-        self.contrib_budget_bytes = contrib_budget_bytes
-        self.contrib_pool = contrib_pool
+        self.options = opts
+        self.contrib_budget_bytes = opts.contrib_budget_bytes
+        self.contrib_pool = opts.contrib_pool
         self.coalescer = None
         self.readers: Dict[str, object] = {}
         self._mask_charged: Dict[str, bool] = {}
         for name, var in archive.variables.items():
-            self.readers[name] = var.open_reader(
-                contrib_budget_bytes=contrib_budget_bytes,
-                contrib_pool=contrib_pool)
+            self.readers[name] = var.open_reader(opts)
             self._mask_charged[name] = False
         self._mask_bytes = 0
         # How many reassign_eb reduction steps ahead the retrieval loop may
-        # hint to the fetcher (store sessions override via StoreArchive.open;
-        # depth 1 is always a prefix of the next round's fetch, so nothing
-        # speculative is ever wasted).
-        self.prefetch_depth = 1
+        # hint to the fetcher (depth 1 is always a prefix of the next
+        # round's fetch, so nothing speculative is ever wasted).
+        self.prefetch_depth = opts.prefetch_depth
 
     @property
     def bytes_retrieved(self) -> int:
@@ -680,6 +698,32 @@ class RetrievalSession:
     def degraded(self) -> bool:
         return bool(self.availability())
 
+    def reader(self, name: str):
+        """The per-variable reader, opening one lazily for variables that
+        appeared AFTER this session did (live archives: a journal replay on
+        ``refresh()`` can add timeseries variables to an open archive)."""
+        r = self.readers.get(name)
+        if r is None:
+            var = self.archive.variables.get(name)
+            if var is None:
+                refresh = getattr(self.archive, "refresh", None)
+                if refresh is not None:
+                    refresh()          # maybe it was journaled since open
+                var = self.archive.variables.get(name)
+            if var is None:
+                raise KeyError(name)
+            r = var.open_reader(self.options)
+            self.readers[name] = r
+            self._mask_charged.setdefault(name, False)
+        return r
+
+    def follow(self, name: str) -> "FollowStream":
+        """Follow-mode view over a live timeseries variable: ``poll()``
+        surfaces newly appended timesteps (refreshing the archive's journal
+        first), ``read(t)`` decodes them — without reopening anything, and
+        bit-identical to a one-shot session over the same data."""
+        return FollowStream(self, name)
+
     def prefetch(self, name: str, eps: float, certain: bool = True) -> None:
         """Non-binding hint that ``reconstruct(name, eps)`` is coming —
         forwarded to readers that support background segment fetch
@@ -702,7 +746,7 @@ class RetrievalSession:
         if self.coalescer is not None:
             data, achieved = self.coalescer.reconstruct(self, name, eps)
         else:
-            data, achieved = self.readers[name].request(eps)
+            data, achieved = self.reader(name).request(eps)
         mask = self.archive.masks.get(name)
         if mask is not None:
             if not self._mask_charged[name]:
@@ -748,3 +792,51 @@ class RetrievalSession:
         rbytes = sum(self.readers[n].bytes_fetched for n in names) \
             + self._mask_bytes
         return 8.0 * rbytes / max(n_elems, 1)
+
+
+class FollowStream:
+    """Live view over one timeseries variable of an open session.
+
+    ``poll()`` refreshes the archive's journal and returns the timestep
+    indices that became visible since the previous poll (never re-reporting
+    one); ``read(t)`` decodes any retained timestep through the session's
+    chain-caching reader, so walking the stream in order pays exactly one
+    delta decode per step — the property that makes a followed session
+    bit- AND byte-identical to a one-shot session over the same timesteps.
+    """
+
+    def __init__(self, session: RetrievalSession, name: str):
+        reader = session.reader(name)
+        var = getattr(reader, "var", None)
+        if var is None or not hasattr(var, "timesteps"):
+            raise ValueError(f"variable {name!r} is not a timeseries — "
+                             f"follow() needs a journaled (v4) live archive")
+        self.session = session
+        self.name = name
+        self._reader = reader
+        self._var = var
+        # report everything already visible on the first poll
+        self._next_t = var.base_t
+
+    @property
+    def latest(self) -> Optional[int]:
+        """Newest visible timestep index (None before the first append)."""
+        return self._var.latest_t
+
+    def poll(self) -> List[int]:
+        """Refresh the journal; return newly visible timestep indices."""
+        refresh = getattr(self.session.archive, "refresh", None)
+        if refresh is not None:
+            refresh()
+        latest = self._var.latest_t
+        if latest is None:
+            return []
+        start = max(self._next_t, self._var.base_t)
+        if start > latest:
+            return []
+        self._next_t = latest + 1
+        return list(range(start, latest + 1))
+
+    def read(self, t: int) -> Tuple[np.ndarray, float]:
+        """Decode timestep ``t``; returns ``(data, certified bound)``."""
+        return self._reader.read(t)

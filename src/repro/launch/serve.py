@@ -42,11 +42,10 @@ from __future__ import annotations
 
 import argparse
 import os
-import shutil
 import tempfile
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -55,12 +54,16 @@ from repro.core import ge
 from repro.core.refactor import ContribStats, refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
+from repro.options import OpenOptions, SessionOptions
 from repro.serve import (ContribBudgetPool, ReconstructCoalescer, ServePlane,
                          ServerOverloadedError)
 from repro.store import (BlobQuarantine, RetryPolicy, SegmentCache,
-                         open_archive, save_archive, save_sharded_archive)
+                         open_archive)
 from repro.store.container import is_url
 from repro.store.httpd import StoreHTTPServer
+from repro.store.writer import ensure_archive   # noqa: F401  (re-export: the
+# create-once lockfile dance now lives with the writer API, but this module
+# remains its historical import path for embedders and tests)
 
 
 @dataclass
@@ -68,83 +71,6 @@ class Request:
     client: str
     qois: List[str]
     tau: float
-
-
-def ensure_archive(store_path: str, builder: Callable[[], object],
-                   shard_by: Optional[str] = None,
-                   stale_lock_s: float = 300.0,
-                   wait_timeout_s: float = 300.0,
-                   poll_s: float = 0.05) -> bool:
-    """Create the archive container at ``store_path`` exactly once across
-    racing processes; returns True when THIS call created it.
-
-    Two servers starting on the same missing path used to race
-    ``save_*_archive`` — each refactoring the fields and interleaving
-    writes into one half-written container.  Creation is now serialized
-    behind ``store_path + ".lock"`` (``O_CREAT|O_EXCL`` — the portable
-    atomic claim) and published by writing to a private ``.tmp.<pid>``
-    target followed by one atomic ``os.rename``: every other process
-    either sees no container (and waits on the lock) or the complete one,
-    never a prefix.  ``builder`` runs only in the winning process, so the
-    refactor itself also happens exactly once.  A lock older than
-    ``stale_lock_s`` is presumed crashed and broken; waiters give up with
-    ``TimeoutError`` after ``wait_timeout_s`` rather than hang a server
-    boot forever.
-    """
-    if is_url(store_path) or os.path.exists(store_path):
-        return False
-    lock_path = store_path + ".lock"
-    parent = os.path.dirname(os.path.abspath(store_path))
-    os.makedirs(parent, exist_ok=True)
-    deadline = time.monotonic() + wait_timeout_s
-    while True:
-        if os.path.exists(store_path):
-            return False                 # someone else finished the job
-        try:
-            fd = os.open(lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
-        except FileExistsError:
-            try:
-                age = time.time() - os.path.getmtime(lock_path)
-            except OSError:
-                continue                 # lock released between EXCL and stat
-            if age > stale_lock_s:
-                # a crashed creator must not wedge every future boot
-                try:
-                    os.unlink(lock_path)
-                except OSError:
-                    pass
-                continue
-            if time.monotonic() > deadline:
-                raise TimeoutError(
-                    f"timed out after {wait_timeout_s:.0f}s waiting for "
-                    f"{lock_path} (another process creating the archive?)")
-            time.sleep(poll_s)
-            continue
-        try:
-            os.write(fd, f"{os.getpid()}\n".encode())
-            os.close(fd)
-            if os.path.exists(store_path):
-                return False             # raced: winner finished before EXCL
-            tmp = f"{store_path}.tmp.{os.getpid()}"
-            try:
-                archive = builder()      # the refactor happens exactly once
-                if shard_by:
-                    save_sharded_archive(archive, tmp, shard_by=shard_by)
-                else:
-                    save_archive(archive, tmp)
-                os.rename(tmp, store_path)   # publish atomically
-            except BaseException:
-                if os.path.isdir(tmp):
-                    shutil.rmtree(tmp, ignore_errors=True)
-                elif os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
-            return True
-        finally:
-            try:
-                os.unlink(lock_path)
-            except OSError:
-                pass
 
 
 class RetrievalServer:
@@ -191,9 +117,10 @@ class RetrievalServer:
                                       depth_weight=cache_depth_weight,
                                       archive_floor_bytes=archive_floor_bytes,
                                       admission_control=cache_admission)
-            self.archive = open_archive(store_path, cache=self.cache,
-                                        retry_policy=retry_policy,
-                                        quarantine=quarantine)
+            self.archive = open_archive(
+                store_path, OpenOptions.multi_tenant(
+                    self.cache, retry_policy=retry_policy,
+                    quarantine=quarantine))
             shapes = {k: np.asarray(v).shape for k, v in fields.items()}
             if self.archive.method != method or self.archive.shapes != shapes:
                 raise SystemExit(
@@ -220,9 +147,9 @@ class RetrievalServer:
         with self._sessions_mu:
             session = self.sessions.get(client)
             if session is None:
-                session = self.archive.open(
+                session = self.archive.open(SessionOptions(
                     contrib_budget_bytes=self.contrib_budget_bytes,
-                    contrib_pool=self.contrib_pool)
+                    contrib_pool=self.contrib_pool))
                 session.coalescer = self.coalescer
                 self.sessions[client] = session
         return session

@@ -20,10 +20,13 @@ from repro.store.bytestore import (
     RemoteByteStore,
 )
 from repro.store.cache import CacheStats, SegmentCache
+from repro.options import OpenOptions, ReproDeprecationWarning, SessionOptions
 from repro.store.container import (
+    JOURNAL_NAME,
     StoreArchive,
     StoreBitplaneVar,
     StoreSnapshotVar,
+    StoreTimeseriesVar,
     build_container,
     build_sharded_container,
     manifest_archive_id,
@@ -48,15 +51,19 @@ from repro.store.retry import (
     SegmentUnavailableError,
     is_transient,
 )
+from repro.store.writer import ArchiveWriter, ensure_archive
 
 __all__ = [
     "ByteStore", "MemoryByteStore", "FileByteStore", "HTTPByteStore",
     "HTTPStats", "RemoteByteStore",
     "SegmentCache", "CacheStats",
     "StoreArchive", "StoreBitplaneVar", "StoreSnapshotVar",
+    "StoreTimeseriesVar",
     "build_container", "build_sharded_container",
     "save_archive", "save_sharded_archive",
     "open_archive", "memory_store_archive",
+    "ArchiveWriter", "ensure_archive", "JOURNAL_NAME",
+    "OpenOptions", "SessionOptions", "ReproDeprecationWarning",
     "segment_depth", "manifest_archive_id",
     "crc32c", "SegmentFetcher", "SegmentEntry", "FetchStats", "ChecksumError",
     "RetryPolicy", "BlobQuarantine", "BlobQuarantinedError",

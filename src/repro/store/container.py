@@ -37,6 +37,20 @@ readers stream checksum-verified segments through a `SegmentFetcher`
 instead of holding the encoded bytes, and reconstruction is bit-identical
 to an in-memory session at every requested bound.
 
+Live archives (format v4): a sharded directory may additionally carry an
+append-only ``journal.jsonl`` next to ``manifest.json``.  The manifest
+stays the v3-compatible base; every appended timestep adds one immutable
+``V.t<k>.seg`` blob plus journal records describing its segments — nothing
+already written is ever rewritten, so readers and the writer never race on
+shared bytes.  ``StoreArchive.refresh()`` re-reads the journal (over HTTP:
+a conditional GET that costs one 304 when nothing changed) and applies only
+the *complete* trailing records, making new timesteps retrievable in an
+already-open session; ``repro.store.writer.ArchiveWriter`` is the producing
+side.  Timeseries segments ``V/t<k>/b<j>`` decode through keyframe→delta
+chains (repro.compressors.snapshots.decode_timestep), and a retention
+record drops a keyframe-aligned prefix of timesteps without invalidating
+anything that remains.
+
 JSON is a deliberate choice for the manifest: Python's float repr
 round-trips IEEE-754 doubles exactly, so eps ladders / ranges / amax survive
 save->open bit-identically.
@@ -46,6 +60,7 @@ from __future__ import annotations
 import json
 import os
 import struct
+import threading
 import urllib.parse
 import zlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -59,6 +74,8 @@ from repro.compressors.snapshots import (
     DeltaSnapshotArchive,
     DeltaSnapshotReader,
     SnapshotReader,
+    decode_timestep,
+    timestep_bound,
 )
 from repro.compressors.szlike import SZCompressed, sz_decompress
 from repro.core.masks import OutlierMask
@@ -69,7 +86,9 @@ from repro.core.refactor import (
     SnapshotVarArchive,
     VarAvailability,
     _BitplaneVarReader,
+    _resolve_session_options,
 )
+from repro.options import OpenOptions, SessionOptions, _from_legacy
 from repro.store.bytestore import ByteStore, FileByteStore, HTTPByteStore, \
     MemoryByteStore
 from repro.store.cache import SegmentCache
@@ -79,8 +98,10 @@ from repro.store.retry import BlobQuarantine, RetryPolicy
 from repro.transform.hierarchical import level_map
 
 MAGIC = b"PRSTORE1"
-FORMAT_VERSION = 3
+FORMAT_VERSION = 4          # newest readable container format
+STATIC_FORMAT_VERSION = 3   # written for archives without v4 features
 MANIFEST_NAME = "manifest.json"
+JOURNAL_NAME = "journal.jsonl"
 
 SHARD_POLICIES = ("single", "variable", "group")
 
@@ -91,15 +112,17 @@ def segment_depth(key: str) -> int:
     Bitplane segments ``V/g<l>/p<b>`` map to their plane index ``b`` (0 =
     MSB, consumed by every client; large = LSB, consumed by few).  Snapshot
     blobs ``V/s<i>/b<j>`` map to the snapshot index ``i`` (ladder position:
-    later snapshots serve only tight tolerances).  Sign planes, masks and
-    anything unrecognised map to 0 — they ride with the first plane and are
-    as shared as the MSB prefix."""
+    later snapshots serve only tight tolerances), and timestep blobs
+    ``V/t<k>/b<j>`` to the timestep index ``k`` (a follow-mode session
+    consumes the newest timesteps; deep history is cold).  Sign planes,
+    masks and anything unrecognised map to 0 — they ride with the first
+    plane and are as shared as the MSB prefix."""
     parts = key.split("/")
     last = parts[-1]
     if last[:1] == "p" and last[1:].isdigit():
         return int(last[1:])
-    if len(parts) == 3 and parts[1][:1] == "s" and parts[1][1:].isdigit() \
-            and last[:1] == "b":
+    if len(parts) == 3 and parts[1][:1] in ("s", "t") \
+            and parts[1][1:].isdigit() and last[:1] == "b":
         return int(parts[1][1:])
     return 0
 
@@ -218,7 +241,7 @@ def build_sharded_container(archive: Archive,
                        "n_true": int(m.mask.sum())}
     payloads = w.payloads()
     manifest = {
-        "format": "prstore", "version": FORMAT_VERSION,
+        "format": "prstore", "version": STATIC_FORMAT_VERSION,
         "method": archive.method,
         "ranges": dict(archive.ranges),
         "shapes": {k: list(v) for k, v in archive.shapes.items()},
@@ -342,14 +365,16 @@ class StoreBitplaneVar:
         return [FetcherPlaneSource(self._fetcher, f"{self.name}/g{l}", meta)
                 for l, meta in enumerate(self.groups)]
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
-                    contrib_pool=None) -> _BitplaneVarReader:
+    def open_reader(self, options: Optional[SessionOptions] = None,
+                    **legacy) -> _BitplaneVarReader:
+        opts = _resolve_session_options(options, legacy,
+                                        "StoreBitplaneVar.open_reader")
         # the fetcher's FetchStats doubles as the ContribStats sink so one
         # object reports transport traffic AND reader residency/spills
-        return _BitplaneVarReader(self,
-                                  contrib_budget_bytes=contrib_budget_bytes,
-                                  contrib_stats=self._fetcher.stats,
-                                  contrib_pool=contrib_pool)
+        return _BitplaneVarReader(
+            self, contrib_budget_bytes=opts.contrib_budget_bytes,
+            contrib_stats=self._fetcher.stats,
+            contrib_pool=opts.contrib_pool)
 
 
 class _SnapshotHandle:
@@ -497,12 +522,179 @@ class StoreSnapshotVar:
     def total_nbytes(self) -> int:
         return sum(h.nbytes for h in self.snapshots)
 
-    def open_reader(self, contrib_budget_bytes: Optional[int] = None,
-                    contrib_pool=None):
-        # contribution budgets/pools are bitplane-reader state; accepted for
-        # interface uniformity with the other variable kinds
+    def open_reader(self, options: Optional[SessionOptions] = None,
+                    **legacy):
+        # contribution budgets/pools are bitplane-reader state; the options
+        # object is accepted (and validated) for interface uniformity
+        _resolve_session_options(options, legacy,
+                                 "StoreSnapshotVar.open_reader")
         cls = _StoreDeltaSnapshotReader if self.delta else _StoreSnapshotReader
         return cls(self)
+
+
+# ---------------------------------------------------------------------------
+# Timeseries variables (format v4: journaled, append-only)
+# ---------------------------------------------------------------------------
+
+
+class _TimestepHandle:
+    """Manifest/journal-only view of one appended timestep: chain metadata
+    resident, payload blobs fetched (verified) on decode."""
+
+    def __init__(self, name: str, spec: dict, fetcher: SegmentFetcher):
+        self.t: int = spec["t"]
+        self.keyframe: bool = spec["keyframe"]
+        self.eps: float = spec["eps"]
+        self.amax: float = spec["amax"]
+        self._spec = spec
+        self._keys = [f"{name}/t{self.t}/b{j}"
+                      for j in range(len(spec["blob_sizes"]))]
+        self._fetcher = fetcher
+        self._loaded: Optional[SZCompressed] = None
+
+    @property
+    def nbytes(self) -> int:
+        return sum(self._spec["blob_sizes"]) + 64  # + header, as SZCompressed
+
+    @property
+    def segment_keys(self) -> List[str]:
+        return list(self._keys)
+
+    def prefetch(self, certain: bool = True) -> None:
+        self._fetcher.prefetch(self._keys, certain=certain)
+
+    def load(self) -> SZCompressed:
+        if self._loaded is None:
+            blobs = self._fetcher.fetch_many(self._keys)
+            s = self._spec
+            self._loaded = SZCompressed(
+                eps=s["eps"], orig_shape=tuple(s["orig_shape"]),
+                padded_shape=tuple(s["padded_shape"]), levels=s["levels"],
+                blobs=blobs, dtypes=list(s["dtypes"]), amax=s["amax"])
+        return self._loaded
+
+
+class StoreTimeseriesVar:
+    """Store-backed live timeseries variable (format v4).
+
+    Timesteps arrive through journal replay: each is either a keyframe
+    (independently decodable) or a delta against its predecessor's
+    reconstruction.  ``base_t`` is the oldest retained timestep — always a
+    keyframe, advanced by retention records.  The timestep list only ever
+    grows at the tail / shrinks at the head, so a reader holding an index
+    into it stays valid across concurrent ``refresh()`` calls."""
+
+    kind = "timeseries"
+
+    def __init__(self, name: str, spec: dict, fetcher: SegmentFetcher):
+        self.name = name
+        self._fetcher = fetcher
+        self.base_t: int = spec.get("base_t", 0)
+        self.timesteps: List[_TimestepHandle] = [
+            _TimestepHandle(name, ts, fetcher)
+            for ts in spec.get("timesteps", [])]
+
+    @property
+    def total_nbytes(self) -> int:
+        return sum(h.nbytes for h in self.timesteps)
+
+    @property
+    def latest_t(self) -> Optional[int]:
+        return self.timesteps[-1].t if self.timesteps else None
+
+    def handle(self, t: int) -> _TimestepHandle:
+        i = t - self.base_t
+        if i < 0:
+            raise KeyError(f"{self.name}: timestep {t} dropped by retention "
+                           f"(oldest retained is {self.base_t})")
+        if i >= len(self.timesteps):
+            raise KeyError(f"{self.name}: timestep {t} not (yet) in the "
+                           f"journal — latest is {self.latest_t}")
+        return self.timesteps[i]
+
+    def add_timestep(self, spec: dict) -> None:
+        expect = self.base_t + len(self.timesteps)
+        if spec["t"] != expect:
+            raise ValueError(f"{self.name}: journal timestep {spec['t']} "
+                             f"out of order (expected {expect})")
+        if not spec["keyframe"] and not self.timesteps:
+            raise ValueError(f"{self.name}: delta timestep {spec['t']} "
+                             f"has no retained predecessor")
+        self.timesteps.append(_TimestepHandle(self.name, spec, self._fetcher))
+
+    def drop_before(self, t: int) -> List[str]:
+        """Apply a retention record: forget timesteps ``< t`` and return
+        their segment keys so the caller can drop them from the fetch
+        index.  ``t`` must land on a keyframe — the chain invariant."""
+        if t <= self.base_t:
+            return []
+        n = min(t - self.base_t, len(self.timesteps))
+        if n < len(self.timesteps) and not self.timesteps[n].keyframe:
+            raise ValueError(f"{self.name}: retention boundary t={t} is not "
+                             f"a keyframe — remaining chain would dangle")
+        dropped: List[str] = []
+        for h in self.timesteps[:n]:
+            dropped.extend(h.segment_keys)
+        del self.timesteps[:n]
+        self.base_t += n
+        return dropped
+
+    def open_reader(self, options: Optional[SessionOptions] = None,
+                    **legacy) -> "_TimeseriesReader":
+        _resolve_session_options(options, legacy,
+                                 "StoreTimeseriesVar.open_reader")
+        return _TimeseriesReader(self)
+
+
+class _TimeseriesReader:
+    """Chain-decoding reader over a (possibly growing) timeseries variable.
+
+    ``read(t)`` decodes timestep ``t`` through its keyframe→delta chain,
+    reusing the previous reconstruction when ``t`` continues the cached
+    chain — a follow-mode session walking t, t+1, t+2 pays exactly one new
+    delta decode per step, which is what makes it bit-identical AND
+    byte-identical to a one-shot session reading the same timesteps.
+    ``request(eps)`` serves the uniform session interface by decoding the
+    latest visible timestep (the live-dashboard semantics)."""
+
+    def __init__(self, var: StoreTimeseriesVar):
+        self.var = var
+        self.bytes_fetched = 0
+        self._charged: set = set()                     # timestep indices
+        self._chain: Optional[Tuple[int, np.ndarray]] = None  # (t, recon)
+
+    def _charge(self, h: _TimestepHandle) -> None:
+        if h.t not in self._charged:
+            self.bytes_fetched += h.nbytes
+            self._charged.add(h.t)
+
+    def read(self, t: int) -> Tuple[np.ndarray, float]:
+        """Decode timestep ``t``; returns ``(data, certified L-inf bound)``."""
+        h = self.var.handle(t)
+        # find the chain start: the latest keyframe at or before t, or the
+        # cached reconstruction if it is an ancestor on the same chain
+        start = t
+        while not self.var.handle(start).keyframe:
+            start -= 1
+        prev: Optional[np.ndarray] = None
+        begin = start
+        if self._chain is not None and start <= self._chain[0] <= t:
+            begin, prev = self._chain[0] + 1, self._chain[1]
+        for k in range(begin, t + 1):
+            hk = self.var.handle(k)
+            snap = hk.load()            # fetches (verified) on first touch
+            prev = decode_timestep(snap, None if hk.keyframe else prev)
+            self._charge(hk)
+        self._chain = (t, prev)
+        amaxes = [self.var.handle(k).amax for k in range(start, t + 1)]
+        return prev, timestep_bound(h.eps, amaxes)
+
+    def request(self, eps: float) -> Tuple[np.ndarray, float]:
+        latest = self.var.latest_t
+        if latest is None:
+            raise KeyError(f"{self.var.name}: no timesteps appended yet "
+                           f"(refresh() the archive or append first)")
+        return self.read(latest)
 
 
 # ---------------------------------------------------------------------------
@@ -617,6 +809,12 @@ class StoreArchive:
     are tagged with this archive's ``archive_id`` (derived from the
     manifest unless overridden) and each segment's plane depth, so a shared
     cache can evict depth-weighted and hold per-archive floors/caps.
+
+    ``journal_source`` (live v4 archives) is a zero-argument callable
+    returning the CURRENT full journal bytes — re-read on every
+    ``refresh()``.  Local opens re-read the file; HTTP opens go through
+    ``HTTPByteStore.read_all``'s conditional GET, so an unchanged journal
+    costs one 304 header exchange.
     """
 
     def __init__(self, manifest: dict, store: StoreSpec,
@@ -625,7 +823,8 @@ class StoreArchive:
                  cache: Optional[SegmentCache] = None,
                  archive_id: Optional[str] = None,
                  retry_policy: Optional[RetryPolicy] = None,
-                 quarantine: Optional[BlobQuarantine] = None):
+                 quarantine: Optional[BlobQuarantine] = None,
+                 journal_source: Optional[Callable[[], bytes]] = None):
         if manifest.get("format") != "prstore":
             raise ValueError("not a prstore manifest")
         if manifest.get("version", 0) > FORMAT_VERSION:
@@ -638,8 +837,11 @@ class StoreArchive:
             k: tuple(v) for k, v in manifest["shapes"].items()}
         # the id only matters as a cache grouping key, and hashing a big
         # manifest costs ~ms per open — derive it eagerly only when a cache
-        # will consume it (the property below derives on demand otherwise)
-        if archive_id is None and cache is not None:
+        # will consume it (the property below derives on demand otherwise).
+        # Live archives also pin it now: journal replay mutates the manifest
+        # dict (blob sizes), and the grouping id must not drift with growth.
+        if archive_id is None and (cache is not None
+                                   or journal_source is not None):
             archive_id = manifest_archive_id(manifest)
         self._archive_id = archive_id
         index = _parse_segment_index(manifest, payload_offset,
@@ -667,9 +869,78 @@ class StoreArchive:
             if spec["kind"] == "bitplane":
                 self.variables[name] = StoreBitplaneVar(name, spec,
                                                         self.fetcher)
+            elif spec["kind"] == "timeseries":
+                self.variables[name] = StoreTimeseriesVar(name, spec,
+                                                          self.fetcher)
             else:
                 self.variables[name] = StoreSnapshotVar(name, spec,
                                                         self.fetcher)
+        # -- live-archive (v4 journal) state --------------------------------
+        self.sealed: bool = bool(manifest.get("sealed", False))
+        self._journal_source = journal_source
+        # a consolidated manifest records how many leading journal records
+        # it already folded in; replay starts past them
+        self._journal_skip: int = int(manifest.get("journal_records", 0))
+        self._refresh_mu = threading.Lock()
+        if journal_source is not None and not self.sealed:
+            self.refresh()
+
+    # -- live archives (journal replay) --------------------------------------
+
+    def refresh(self) -> int:
+        """Re-read the journal and apply any records appended since the
+        last refresh (or open); returns how many were applied.  Only
+        *complete* lines are consumed — a partially-written tail record
+        (the writer mid-append) waits for the next refresh.  Static and
+        sealed archives return 0 without touching the store."""
+        if self._journal_source is None or self.sealed:
+            return 0
+        with self._refresh_mu:
+            raw = self._journal_source()
+            lines = raw.split(b"\n")[:-1]   # drop the unterminated tail
+            records = lines[self._journal_skip:]
+            applied = 0
+            for line in records:
+                line = line.strip()
+                if line:
+                    self._apply_journal_record(json.loads(line))
+                applied += 1
+            self._journal_skip += applied
+            return applied
+
+    def _apply_journal_record(self, rec: dict) -> None:
+        op = rec.get("op")
+        if op == "segment":
+            key = rec["key"]
+            self.fetcher.add_segments({key: SegmentEntry(
+                offset=rec["offset"], size=rec["size"], crc=rec["crc"],
+                blob=rec["blob"], depth=segment_depth(key),
+                codec=rec.get("codec"))})
+            # keep the manifest's blob-size registry current: the lazy HTTP
+            # blob resolver reads it to skip per-blob HEAD probes
+            blobs = self.manifest.setdefault("blobs", {})
+            blobs[rec["blob"]] = max(blobs.get(rec["blob"], 0),
+                                     rec["offset"] + rec["size"])
+        elif op == "var":
+            name = rec["name"]
+            if name not in self.variables:
+                self.variables[name] = StoreTimeseriesVar(
+                    name, {"kind": "timeseries"}, self.fetcher)
+                self.shapes[name] = tuple(rec["shape"])
+                self.ranges[name] = rec["range"]
+        elif op == "timestep":
+            var = self.variables[rec["var"]]
+            if not isinstance(var, StoreTimeseriesVar):
+                raise ValueError(f"journal timestep for non-timeseries "
+                                 f"variable {rec['var']!r}")
+            var.add_timestep(rec)
+        elif op == "retention":
+            var = self.variables[rec["var"]]
+            self.fetcher.remove_segments(var.drop_before(rec["base_t"]))
+        elif op == "seal":
+            self.sealed = True
+        else:
+            raise ValueError(f"unknown journal op {op!r}")
 
     @property
     def archive_id(self) -> str:
@@ -700,14 +971,10 @@ class StoreArchive:
     def n_elements(self, name: str) -> int:
         return int(np.prod(self.shapes[name]))
 
-    def open(self, prefetch_depth: int = 1,
-             contrib_budget_bytes: Optional[int] = None,
-             contrib_pool=None) -> RetrievalSession:
-        session = RetrievalSession(self,
-                                   contrib_budget_bytes=contrib_budget_bytes,
-                                   contrib_pool=contrib_pool)
-        session.prefetch_depth = prefetch_depth
-        return session
+    def open(self, options: Optional[SessionOptions] = None,
+             **legacy) -> RetrievalSession:
+        opts = _resolve_session_options(options, legacy, "StoreArchive.open")
+        return RetrievalSession(self, opts)
 
     def close(self) -> None:
         self.fetcher.close()
@@ -724,12 +991,23 @@ def is_url(source: str) -> bool:
     return source.startswith(("http://", "https://"))
 
 
-def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
-                 blob_resolver: Optional[Callable[[str], ByteStore]] = None,
-                 cache: Optional[SegmentCache] = None,
-                 archive_id: Optional[str] = None,
-                 retry_policy: Optional[RetryPolicy] = None,
-                 quarantine: Optional[BlobQuarantine] = None) -> StoreArchive:
+def _resolve_open_options(options: Optional[OpenOptions],
+                          legacy: dict, where: str) -> OpenOptions:
+    if legacy:
+        if options is not None:
+            raise TypeError(f"{where}: pass either an OpenOptions object or "
+                            f"legacy keyword arguments, not both")
+        return _from_legacy(OpenOptions, legacy, where)
+    return options if options is not None else OpenOptions()
+
+
+def _journal_manifest(manifest: dict) -> bool:
+    """Does this manifest advertise a live journal worth tailing?"""
+    return bool(manifest.get("journal")) and not manifest.get("sealed")
+
+
+def open_archive(source, options: Optional[OpenOptions] = None,
+                 **legacy) -> StoreArchive:
     """Open a container — single-file, sharded, local, or over HTTP.
 
     ``source`` may be:
@@ -741,36 +1019,41 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
       * an ``http(s)://`` URL — of a ``manifest.json`` (sharded; blobs
         default to HTTPByteStores resolved relative to the manifest URL) or
         of a single ``.prs`` resource (ranged GETs through HTTPByteStore);
-      * a manifest dict — blobs come from ``blob_resolver``;
+      * a manifest dict — blobs come from ``options.blob_resolver``;
       * an already-constructed ByteStore (e.g. a RemoteByteStore) — the
         container header is read *through* the store, so header/manifest
         transfer is accounted like any other read.
 
-    ``blob_resolver`` overrides the default blob lookup, letting shards mix
-    backends (some in memory, some on disk, some over HTTP).
+    ``options`` is an :class:`repro.options.OpenOptions` bundling the
+    transport/integrity knobs (prefetch workers, crc verification, blob
+    resolver, segment cache, cache-group id, retry policy, quarantine,
+    journal following) — see its docstring and presets.  The pre-v4 loose
+    keyword arguments still work through a once-warning deprecation shim.
 
-    ``archive_id`` overrides the cache budget-group id (default: a hash of
-    the manifest — see ``manifest_archive_id``).
-
-    ``retry_policy`` / ``quarantine`` configure the fault-tolerance layer
-    (repro.store.retry): the policy drives both the fetcher's retry loop
-    (every backend) and any HTTP stores this function constructs; the
-    quarantine is the per-blob circuit breaker.  Defaults (None) enable
-    both — pass ``RetryPolicy.none()`` to disable retries.
+    A live (journaled, unsealed) sharded archive is opened at its current
+    journal tail; ``StoreArchive.refresh()`` picks up later appends —
+    locally by re-reading ``journal.jsonl``, over HTTP via a conditional
+    GET that costs one 304 when nothing changed.
     """
+    opts = _resolve_open_options(options, legacy, "open_archive")
+    blob_resolver = opts.blob_resolver
+
     def build(manifest: dict, default: Optional[StoreSpec],
-              payload_offset: int = 0) -> StoreArchive:
+              payload_offset: int = 0,
+              journal_source: Optional[Callable[[], bytes]] = None
+              ) -> StoreArchive:
         return StoreArchive(manifest, blob_resolver or default,
                             payload_offset=payload_offset,
-                            prefetch_workers=prefetch_workers,
-                            verify=verify, cache=cache,
-                            archive_id=archive_id,
-                            retry_policy=retry_policy,
-                            quarantine=quarantine)
+                            prefetch_workers=opts.prefetch_workers,
+                            verify=opts.verify, cache=opts.cache,
+                            archive_id=opts.archive_id,
+                            retry_policy=opts.retry_policy,
+                            quarantine=opts.quarantine,
+                            journal_source=journal_source)
 
     def http_store(url: str, **kw) -> HTTPByteStore:
-        if retry_policy is not None:
-            kw["retry_policy"] = retry_policy
+        if opts.retry_policy is not None:
+            kw["retry_policy"] = opts.retry_policy
         return HTTPByteStore(url, **kw)
 
     if isinstance(source, dict):
@@ -784,12 +1067,20 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
         if urllib.parse.urlsplit(source).path.endswith(".json"):
             with http_store(source) as ms:
                 manifest = json.loads(ms.read_all().decode("utf-8"))
-            # blob sizes are recorded in the manifest, so shard stores skip
-            # their HEAD probe entirely (one GET per first-touched shard)
+            journal_source = None
+            if opts.follow and _journal_manifest(manifest):
+                # a persistent store: read_all's ETag makes every poll of an
+                # unchanged journal a 304 header exchange
+                js = http_store(urllib.parse.urljoin(source, JOURNAL_NAME))
+                journal_source = js.read_all
+            # blob sizes are recorded in the manifest (and kept current by
+            # journal replay), so shard stores skip their HEAD probe
+            # entirely (one GET per first-touched shard)
             blob_sizes = manifest.get("blobs", {})
             return build(manifest, lambda blob: http_store(
                 urllib.parse.urljoin(source, blob),
-                size=blob_sizes.get(blob)))
+                size=blob_sizes.get(blob)),
+                journal_source=journal_source)
         source = http_store(source)
 
     if isinstance(source, str):
@@ -799,8 +1090,18 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
             with open(mpath, "rb") as fh:
                 manifest = json.loads(fh.read().decode("utf-8"))
             root = os.path.dirname(os.path.abspath(mpath))
+            journal_source = None
+            if opts.follow and _journal_manifest(manifest):
+                jpath = os.path.join(root, JOURNAL_NAME)
+
+                def journal_source() -> bytes:
+                    try:
+                        with open(jpath, "rb") as jf:
+                            return jf.read()
+                    except FileNotFoundError:
+                        return b""
             return build(manifest, lambda blob: FileByteStore(
-                os.path.join(root, blob)))
+                os.path.join(root, blob)), journal_source=journal_source)
         source = FileByteStore(source)
 
     # single-blob container: parse the header through the store itself
@@ -816,32 +1117,36 @@ def open_archive(source, prefetch_workers: int = 2, verify: bool = True,
                            else blob_resolver(blob))
         return StoreArchive(manifest, spec,
                             payload_offset=len(MAGIC) + 8 + mlen,
-                            prefetch_workers=prefetch_workers,
-                            verify=verify, cache=cache,
-                            archive_id=archive_id,
-                            retry_policy=retry_policy, quarantine=quarantine)
+                            prefetch_workers=opts.prefetch_workers,
+                            verify=opts.verify, cache=opts.cache,
+                            archive_id=opts.archive_id,
+                            retry_policy=opts.retry_policy,
+                            quarantine=opts.quarantine)
     return StoreArchive(manifest, store,
                         payload_offset=len(MAGIC) + 8 + mlen,
-                        prefetch_workers=prefetch_workers, verify=verify,
-                        cache=cache, archive_id=archive_id,
-                        retry_policy=retry_policy, quarantine=quarantine)
+                        prefetch_workers=opts.prefetch_workers,
+                        verify=opts.verify, cache=opts.cache,
+                        archive_id=opts.archive_id,
+                        retry_policy=opts.retry_policy,
+                        quarantine=opts.quarantine)
 
 
-def memory_store_archive(archive: Archive, prefetch_workers: int = 2,
-                         verify: bool = True, shard_by: str = "single",
-                         cache: Optional[SegmentCache] = None,
-                         archive_id: Optional[str] = None,
-                         retry_policy: Optional[RetryPolicy] = None,
-                         quarantine: Optional[BlobQuarantine] = None
-                         ) -> StoreArchive:
+def memory_store_archive(archive: Archive,
+                         options: Optional[OpenOptions] = None,
+                         shard_by: str = "single",
+                         **legacy) -> StoreArchive:
     """Round an in-memory Archive through the container format without
     touching disk (tests, benchmarks).  ``shard_by`` exercises the sharded
     manifest with one MemoryByteStore per blob."""
+    opts = _resolve_open_options(options, legacy, "memory_store_archive")
     manifest, payloads = build_sharded_container(archive, shard_by=shard_by)
     manifest = json.loads(json.dumps(manifest))   # exact same path as disk
     stores = {blob: MemoryByteStore(data) for blob, data in payloads.items()}
     spec: StoreSpec = stores if shard_by != "single" else stores.get(
         "", MemoryByteStore(b""))
-    return StoreArchive(manifest, spec, prefetch_workers=prefetch_workers,
-                        verify=verify, cache=cache, archive_id=archive_id,
-                        retry_policy=retry_policy, quarantine=quarantine)
+    return StoreArchive(manifest, spec,
+                        prefetch_workers=opts.prefetch_workers,
+                        verify=opts.verify, cache=opts.cache,
+                        archive_id=opts.archive_id,
+                        retry_policy=opts.retry_policy,
+                        quarantine=opts.quarantine)

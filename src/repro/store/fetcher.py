@@ -434,6 +434,28 @@ class SegmentFetcher:
             else:
                 futs[k].set_result(r)
 
+    # -- index maintenance (live archives: journal replay) -------------------
+
+    def add_segments(self, entries: Dict[str, SegmentEntry]) -> None:
+        """Register newly-journaled segments.  Existing keys must not be
+        redefined — the journal is append-only, and silently remapping a key
+        a reader already consumed would break byte accounting."""
+        with self._lock:
+            dup = [k for k in entries if k in self.index]
+            if dup:
+                raise ValueError(f"journal redefines existing segment "
+                                 f"key(s) {sorted(dup)}")
+            self.index.update(entries)
+
+    def remove_segments(self, keys: Iterable[str]) -> None:
+        """Drop retention-expired segments from the index.  In-flight or
+        already-delivered bytes are unaffected; later fetches of a dropped
+        key raise KeyError like any unknown key."""
+        with self._lock:
+            for k in keys:
+                self.index.pop(k, None)
+                self._inflight.pop(k, None)
+
     # -- public API ----------------------------------------------------------
 
     def fetch(self, key: str) -> bytes:

@@ -1,13 +1,23 @@
-"""Regenerate the golden v1/v2 archive fixtures.
+"""Regenerate the golden archive fixtures (formats v1-v4).
 
-    PYTHONPATH=src python tests/fixtures/make_golden.py
+    PYTHONPATH=src python tests/fixtures/make_golden.py            # all
+    PYTHONPATH=src python tests/fixtures/make_golden.py --only v34 # v3+v4
 
 Writes, next to this script:
 
     golden_v1.prs        format-v1 single-file container
     golden_v2/           format-v2 sharded container (manifest.json + *.seg)
-    golden_expected.npz  reconstructions + byte accounting the fixtures
-                         must keep producing, recorded at generation time
+    golden_v3/           format-v3 sharded container — the CURRENT static
+                         encoder's output, frozen (codec-tagged planes)
+    golden_v4/           format-v4 live journaled archive — base manifest +
+                         journal.jsonl + per-timestep blobs, left UNSEALED
+                         so opening it exercises journal replay forever
+    golden_expected.npz  reconstructions + byte accounting the v1/v2
+                         fixtures must keep producing (v3 values are the
+                         same by cross-generation bit identity)
+    golden_v34_expected.npz
+                         v3 byte accounting + v4 per-timestep values,
+                         bounds, and byte accounting
 
 The fixtures freeze the *legacy* on-disk dialects so the codec registry's
 compatibility paths can never silently rot:
@@ -44,7 +54,8 @@ from repro.bitplane.encoder import LevelBitplanes  # noqa: E402
 from repro.core.refactor import refactor_variables  # noqa: E402
 from repro.data.synthetic import ge_like_fields  # noqa: E402
 from repro.store.container import MAGIC, build_container, \
-    build_sharded_container  # noqa: E402
+    build_sharded_container, open_archive, save_sharded_archive  # noqa: E402
+from repro.store.writer import ArchiveWriter  # noqa: E402
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 N = 1 << 10
@@ -122,33 +133,102 @@ def write_v2(arch, directory: str) -> None:
                             ).encode("utf-8"))
 
 
-def main() -> None:
+V4_T = 6                 # timesteps in the journaled fixture
+V4_KEYFRAME = 3          # two keyframe→delta chains: t0-t2, t3-t5
+V4_EPS = 1e-3
+
+
+def _v4_frames(base: np.ndarray):
+    """Deterministic drifting timeseries off the synthetic Vx field — close
+    enough frame-to-frame that deltas genuinely beat keyframes."""
+    return [np.asarray(base * (1.0 + 0.05 * k) + 0.01 * np.cos(7.0 * k),
+                       dtype=base.dtype)
+            for k in range(V4_T)]
+
+
+def write_v3(directory: str) -> None:
+    """Format v3: the *current* static encoder's sharded output, verbatim —
+    codec-tagged 5-tuple segments.  Frozen so the registry's tagged
+    decode paths can never silently rot either."""
     fields = ge_like_fields(n=N, seed=0)
     vel = {k: fields[k] for k in ("Vx", "Vy", "Vz")}
-    arch = _transcode_archive(refactor_variables(vel, method="hb"))
+    arch = refactor_variables(vel, method="hb")
+    save_sharded_archive(arch, directory, shard_by="variable")
 
-    write_v1(arch, os.path.join(HERE, "golden_v1.prs"))
-    write_v2(arch, os.path.join(HERE, "golden_v2"))
 
+def write_v4(directory: str) -> None:
+    """Format v4: a live journaled archive — base manifest + journal.jsonl
+    + one ``.t<k>.seg`` blob per timestep, deliberately left UNSEALED so
+    every open of the fixture replays the journal."""
+    base = ge_like_fields(n=N, seed=0)["Vx"]
+    # context exit closes the journal WITHOUT sealing — live on purpose
+    with ArchiveWriter.create(directory,
+                              keyframe_interval=V4_KEYFRAME) as writer:
+        for frame in _v4_frames(base):
+            writer.append({"T": frame}, eps=V4_EPS)
+
+
+def record_v34_expected() -> None:
+    """Replay both new fixtures through the public reader and freeze what
+    they must keep producing: values, certified bounds, byte accounting."""
     expected = {}
-    session = arch.open()
-    for eps_i, eps in enumerate(EPS_LADDER):
-        for v in vel:
-            data, bound = session.reconstruct(v, eps)
-            expected[f"{v}__eps{eps_i}"] = data
-            expected[f"{v}__bound{eps_i}"] = np.float64(bound)
-    expected["eps_ladder"] = np.asarray(EPS_LADDER)
-    expected["bytes_retrieved"] = np.int64(session.bytes_retrieved)
-    np.savez_compressed(os.path.join(HERE, "golden_expected.npz"), **expected)
 
-    total = sum(os.path.getsize(os.path.join(HERE, f))
-                for f in ("golden_v1.prs",))
-    total += sum(os.path.getsize(os.path.join(HERE, "golden_v2", f))
-                 for f in os.listdir(os.path.join(HERE, "golden_v2")))
-    print(f"wrote golden fixtures under {HERE} "
-          f"({total / 1024:.1f} KiB containers, "
-          f"bytes_retrieved={session.bytes_retrieved})")
+    a3 = open_archive(os.path.join(HERE, "golden_v3"))
+    s3 = a3.open()
+    for eps_i, eps in enumerate(EPS_LADDER):
+        for v in ("Vx", "Vy", "Vz"):
+            data, bound = s3.reconstruct(v, eps)
+            expected[f"v3__{v}__eps{eps_i}"] = data
+            expected[f"v3__{v}__bound{eps_i}"] = np.float64(bound)
+    expected["v3__bytes_retrieved"] = np.int64(s3.bytes_retrieved)
+
+    a4 = open_archive(os.path.join(HERE, "golden_v4"))
+    s4 = a4.open()
+    reader = s4.reader("T")
+    for t in range(V4_T):
+        data, bound = reader.read(t)
+        expected[f"v4__t{t}"] = data
+        expected[f"v4__bound{t}"] = np.float64(bound)
+    expected["v4__bytes_retrieved"] = np.int64(s4.bytes_retrieved)
+    expected["v4__eps"] = np.float64(V4_EPS)
+    np.savez_compressed(os.path.join(HERE, "golden_v34_expected.npz"),
+                        **expected)
+    print(f"v3 bytes_retrieved={s3.bytes_retrieved} "
+          f"v4 bytes_retrieved={s4.bytes_retrieved}")
+
+
+def main(only: str = "all") -> None:
+    if only in ("all", "v12"):
+        fields = ge_like_fields(n=N, seed=0)
+        vel = {k: fields[k] for k in ("Vx", "Vy", "Vz")}
+        arch = _transcode_archive(refactor_variables(vel, method="hb"))
+
+        write_v1(arch, os.path.join(HERE, "golden_v1.prs"))
+        write_v2(arch, os.path.join(HERE, "golden_v2"))
+
+        expected = {}
+        session = arch.open()
+        for eps_i, eps in enumerate(EPS_LADDER):
+            for v in vel:
+                data, bound = session.reconstruct(v, eps)
+                expected[f"{v}__eps{eps_i}"] = data
+                expected[f"{v}__bound{eps_i}"] = np.float64(bound)
+        expected["eps_ladder"] = np.asarray(EPS_LADDER)
+        expected["bytes_retrieved"] = np.int64(session.bytes_retrieved)
+        np.savez_compressed(os.path.join(HERE, "golden_expected.npz"),
+                            **expected)
+        print(f"wrote v1/v2 fixtures "
+              f"(bytes_retrieved={session.bytes_retrieved})")
+
+    if only in ("all", "v34"):
+        write_v3(os.path.join(HERE, "golden_v3"))
+        write_v4(os.path.join(HERE, "golden_v4"))
+        record_v34_expected()
+        print(f"wrote v3/v4 fixtures under {HERE}")
 
 
 if __name__ == "__main__":
-    main()
+    arg = "all"
+    if len(sys.argv) > 2 and sys.argv[1] == "--only":
+        arg = sys.argv[2]
+    main(arg)

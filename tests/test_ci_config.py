@@ -273,9 +273,63 @@ def test_codec_conformance_suite_rides_in_tier1():
             assert "mark.slow" not in fh.read(), \
                 f"{fname} must stay in the tier-1 (not-slow) selection"
     for fixture in ("golden_v1.prs", "golden_expected.npz",
-                    os.path.join("golden_v2", "manifest.json")):
+                    "golden_v34_expected.npz",
+                    os.path.join("golden_v2", "manifest.json"),
+                    os.path.join("golden_v3", "manifest.json"),
+                    os.path.join("golden_v4", "manifest.json"),
+                    os.path.join("golden_v4", "journal.jsonl")):
         assert os.path.exists(
             os.path.join(REPO, "tests", "fixtures", fixture)), fixture
+
+
+def test_live_archive_bench_rows_ride_the_gate():
+    """The append-throughput / follow-latency / delta-wire-bytes rows are
+    part of the committed baseline (the bench gate's --prefix store/ pulls
+    them in), and the recorded delta economics actually show the win the
+    journal exists for."""
+    import json
+    with open(os.path.join(REPO, "BENCH_kernels.json")) as fh:
+        baseline = json.load(fh)
+    for name in ("store/append_throughput", "store/append_delta_bytes",
+                 "store/follow_latency"):
+        assert name in baseline, name
+    derived = dict(kv.split("=", 1) for kv in
+                   baseline["store/append_delta_bytes"]["derived"].split(";"))
+    assert float(derived["ratio"]) < 0.9, \
+        "recorded delta timesteps are not measurably smaller than keyframes"
+
+
+def test_opener_deprecation_warning_is_an_error_in_ci():
+    """pytest.ini must promote ReproDeprecationWarning to an error: with
+    that filter active, ANY src/-internal call through the legacy kwarg
+    surface fails whichever test exercises it — the whole tier-1 suite is
+    the no-deprecated-internal-callers check.  Pin the filter, then sweep
+    every repro module import under the error filter so even import-time
+    legacy use can't hide in a module no test touches."""
+    import configparser
+    cp = configparser.ConfigParser()
+    cp.read(os.path.join(REPO, "pytest.ini"))
+    filters = [ln.strip() for ln in
+               cp.get("pytest", "filterwarnings").strip().splitlines()]
+    assert "error::repro.options.ReproDeprecationWarning" in filters
+
+    import importlib
+    import pkgutil
+    import warnings
+
+    import repro
+    from repro.options import ReproDeprecationWarning
+    failed = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReproDeprecationWarning)
+        for info in pkgutil.walk_packages(repro.__path__, "repro."):
+            try:
+                importlib.import_module(info.name)
+            except ReproDeprecationWarning:        # pragma: no cover
+                failed.append(info.name)
+            except ImportError:
+                pass       # optional heavy deps (jax extras) may be absent
+    assert not failed, f"deprecated opener usage at import time: {failed}"
 
 
 @pytest.mark.skipif(yaml is None, reason="pyyaml unavailable")

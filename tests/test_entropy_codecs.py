@@ -14,6 +14,7 @@ import pytest
 from repro.bitplane import codecs as C
 from repro.bitplane.encoder import encode_level, decode_magnitudes, \
     decode_values
+from repro.options import OpenOptions
 from repro.store import ChecksumError
 
 from tests._hypothesis_shim import given, settings, strategies as st
@@ -274,7 +275,7 @@ def test_corruption_through_store_raises_integrity_error(tmp_path):
         # unverified path (trusted transport): the codec layer must still
         # raise or produce an exactly-sized plane — never a short/long
         # buffer (raw payloads' flipped bits are undetectable without crc)
-        with open_archive(path, verify=False) as sa:
+        with open_archive(path, OpenOptions.unverified()) as sa:
             blob = sa.fetcher.fetch(key)
             want = _plane_len(sa, key)
             try:

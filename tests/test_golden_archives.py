@@ -1,15 +1,22 @@
-"""Golden-archive compatibility: committed v1/v2 containers must keep
+"""Golden-archive compatibility: committed v1-v4 containers must keep
 opening and decoding bit-identically forever.
 
-The fixtures under ``tests/fixtures/`` (see ``make_golden.py`` there) were
-written in the *legacy* on-disk dialects — v1 single-file / v2 sharded
-manifests, planes tagged ``b"R"``/``b"Z"``, sign planes as bare zlib
-streams — which the current encoder no longer produces.  These tests are
-the contract that manifest v3 (and any future codec work) can never
-silently break an old archive: reconstructions must match both the values
-recorded at fixture-generation time AND a fresh in-memory refactor (the
-cross-generation bit-identity invariant), with the legacy byte accounting
-intact.
+The fixtures under ``tests/fixtures/`` (see ``make_golden.py`` there) span
+every manifest dialect the reader has ever promised to serve:
+
+  v1  single-file container, 3-tuple segments, untagged entropy streams
+  v2  sharded container, 4-tuple segments, untagged entropy streams
+  v3  sharded container, 5-tuple codec-tagged segments (current static
+      encoder output, frozen)
+  v4  live journaled archive — base manifest + journal.jsonl + per-
+      timestep delta blobs, committed UNSEALED so every open replays
+      the journal
+
+These tests are the contract that no codec/format work can silently break
+an old archive: reconstructions must match both the values recorded at
+fixture-generation time AND (for the static formats) a fresh in-memory
+refactor — the cross-generation bit-identity invariant — with byte
+accounting and codec attribution intact.
 """
 import json
 import os
@@ -27,12 +34,21 @@ FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "fixtures")
 V1_PATH = os.path.join(FIXTURES, "golden_v1.prs")
 V2_DIR = os.path.join(FIXTURES, "golden_v2")
+V3_DIR = os.path.join(FIXTURES, "golden_v3")
+V4_DIR = os.path.join(FIXTURES, "golden_v4")
 VARS = ("Vx", "Vy", "Vz")
+V4_T = 6
 
 
 @pytest.fixture(scope="module")
 def expected():
     with np.load(os.path.join(FIXTURES, "golden_expected.npz")) as z:
+        return {k: z[k] for k in z.files}
+
+
+@pytest.fixture(scope="module")
+def expected_v34():
+    with np.load(os.path.join(FIXTURES, "golden_v34_expected.npz")) as z:
         return {k: z[k] for k in z.files}
 
 
@@ -62,13 +78,28 @@ def _manifest_version(source):
         return json.loads(fh.read(mlen))["version"]
 
 
-@pytest.mark.parametrize("source", [V1_PATH, V2_DIR],
-                         ids=["v1-single-file", "v2-sharded"])
-def test_fixture_is_really_legacy_format(source):
-    """Guard the guard: if regeneration ever writes current-format
-    fixtures, the compatibility tests would be testing nothing."""
-    version = _manifest_version(source)
-    assert version == (1 if source.endswith(".prs") else 2)
+@pytest.mark.parametrize("source,version",
+                         [(V1_PATH, 1), (V2_DIR, 2), (V3_DIR, 3),
+                          (V4_DIR, 4)],
+                         ids=["v1-single-file", "v2-sharded",
+                              "v3-codec-tagged", "v4-journaled"])
+def test_fixture_is_really_its_format(source, version):
+    """Guard the guard: if regeneration ever writes a different-format
+    fixture, the compatibility matrix would be testing nothing."""
+    assert _manifest_version(source) == version
+
+
+def test_v4_fixture_is_really_live():
+    """The journaled fixture must stay UNSEALED with a non-trivial journal
+    — a sealed (or journal-less) fixture would never exercise replay."""
+    with open(os.path.join(V4_DIR, "manifest.json"), "rb") as fh:
+        manifest = json.loads(fh.read())
+    assert manifest.get("journal") is True
+    assert not manifest.get("sealed")
+    with open(os.path.join(V4_DIR, "journal.jsonl"), "rb") as fh:
+        records = [json.loads(line) for line in fh.read().splitlines()]
+    assert all(r["op"] != "seal" for r in records)
+    assert sum(1 for r in records if r["op"] == "timestep") == V4_T
 
 
 @pytest.mark.parametrize("source", [V1_PATH, V2_DIR],
@@ -96,6 +127,76 @@ def test_golden_archive_decodes_bit_identically(source, expected,
         # legacy byte accounting is part of the contract: segment sizes in
         # a committed archive can never change
         assert st.bytes_retrieved == int(expected["bytes_retrieved"])
+
+
+def test_golden_v3_decodes_bit_identically(expected, expected_v34,
+                                           fresh_session):
+    """The frozen current-encoder output: values and bounds must match the
+    recorded v3 expectations, the legacy fixtures' recorded values (the
+    same fields — cross-format identity), and a fresh refactor; byte
+    accounting is v3's own (codec-tagged streams are smaller)."""
+    eps_ladder = expected["eps_ladder"]
+    with open_archive(V3_DIR) as sa:
+        st = sa.open()
+        for eps_i, eps in enumerate(eps_ladder):
+            for v in VARS:
+                data, bound = st.reconstruct(v, float(eps))
+                np.testing.assert_array_equal(
+                    data, expected_v34[f"v3__{v}__eps{eps_i}"],
+                    err_msg=f"v3 {v} at eps={eps} drifted from recorded")
+                np.testing.assert_array_equal(
+                    data, expected[f"{v}__eps{eps_i}"],
+                    err_msg=f"v3 {v} at eps={eps} diverged from the legacy "
+                            f"fixtures over the same fields")
+                assert bound == float(expected_v34[f"v3__{v}__bound{eps_i}"])
+                ref, ref_bound = fresh_session.reconstruct(v, float(eps))
+                np.testing.assert_array_equal(data, ref)
+                assert bound == ref_bound
+        assert st.bytes_retrieved == int(expected_v34["v3__bytes_retrieved"])
+
+
+def test_golden_v4_replays_bit_identically(expected_v34):
+    """Journal replay contract: opening the committed live archive and
+    walking its timesteps in order reproduces the recorded values, bounds,
+    and byte accounting exactly — keyframes AND delta chains."""
+    with open_archive(V4_DIR) as sa:
+        st = sa.open()
+        reader = st.reader("T")
+        for t in range(V4_T):
+            data, bound = reader.read(t)
+            np.testing.assert_array_equal(
+                data, expected_v34[f"v4__t{t}"],
+                err_msg=f"v4 timestep {t} drifted from recorded values")
+            assert bound == float(expected_v34[f"v4__bound{t}"])
+        assert st.bytes_retrieved == int(expected_v34["v4__bytes_retrieved"])
+        # fully replayed: nothing left for refresh to apply
+        assert sa.refresh() == 0
+
+
+def test_golden_v4_delta_blobs_beat_keyframes():
+    """The reason v4 exists: consecutive timesteps delta-encode measurably
+    smaller than keyframes.  Byte accounting straight from the committed
+    manifest+journal (keyframes at t0/t3, deltas elsewhere)."""
+    with open_archive(V4_DIR) as sa:
+        var = sa.variables["T"]
+        key_bytes, delta_bytes = [], []
+        for t in range(V4_T):
+            h = var.handle(t)
+            (key_bytes if h.keyframe else delta_bytes).append(h.nbytes)
+        assert key_bytes and delta_bytes
+        assert max(delta_bytes) < 0.75 * min(key_bytes)
+
+
+def test_golden_v3_codec_attribution(expected_v34):
+    """v3 segments carry codec tags: attribution must bucket real codec
+    names (no 'untagged' leakage from tagged planes) and the per-codec
+    sizes must sum to the manifest's total payload bytes."""
+    with open_archive(V3_DIR) as sa:
+        by_codec = sa.codec_bytes()
+        assert set(by_codec) - {"untagged"}, \
+            "v3 fixture reports no tagged codecs — encoder regressed?"
+        assert sum(by_codec.values()) == \
+            sum(e.size for e in sa.fetcher.index.values())
 
 
 def test_golden_archive_reports_untagged_codecs(expected):

@@ -8,6 +8,7 @@ import pytest
 
 from repro.core.refactor import METHODS, refactor_variables
 from repro.data.synthetic import ge_like_fields
+from repro.options import OpenOptions
 from repro.store import (
     FileByteStore,
     HTTPByteStore,
@@ -124,7 +125,8 @@ def test_batched_prefetch_attributes_corruption_to_its_segment(served_prs):
     key (with its own name in the error); batch-mates still deliver."""
     from repro.store import ChecksumError
     srv, _ = served_prs
-    with open_archive(HTTPByteStore(srv.url), prefetch_workers=2) as sa:
+    with open_archive(HTTPByteStore(srv.url),
+                      OpenOptions(prefetch_workers=2)) as sa:
         keys = sorted(sa.fetcher.index)[:6]
         bad = keys[2]
         entry = sa.fetcher.index[bad]
@@ -304,7 +306,7 @@ def test_sharded_mixed_backends_per_shard(vel, hb_archive, tmp_path):
             return FileByteStore(os.path.join(d, blob))
 
         with open_archive(os.path.join(d, "manifest.json"),
-                          blob_resolver=resolver) as sa:
+                          OpenOptions(blob_resolver=resolver)) as sa:
             st = sa.open()
             for v in vel:
                 a, _ = mem.reconstruct(v, 1e-5)
@@ -317,7 +319,7 @@ def test_dropped_shard_only_degrades_its_variable(vel, hb_archive, tmp_path):
     save_sharded_archive(hb_archive, d, shard_by="variable")
     os.unlink(os.path.join(d, "Vz.seg"))
     mem = hb_archive.open()
-    with open_archive(d, prefetch_workers=0) as sa:
+    with open_archive(d, OpenOptions(prefetch_workers=0)) as sa:
         st = sa.open()
         a, _ = st.reconstruct("Vx", 1e-5)       # untouched shards still serve
         b, _ = mem.reconstruct("Vx", 1e-5)
@@ -344,7 +346,8 @@ def test_cross_session_cache_drops_store_fetches(hb_archive, tmp_path):
     save_archive(hb_archive, path)
     with StoreHTTPServer(path) as srv:
         cache = SegmentCache(max_bytes=64 << 20)
-        with open_archive(HTTPByteStore(srv.url), cache=cache) as sa:
+        with open_archive(HTTPByteStore(srv.url),
+                          OpenOptions(cache=cache)) as sa:
             s1 = sa.open()
             a, _ = s1.reconstruct("Vx", 1e-6)
             reads_1 = sa.fetcher.stats.store_reads
@@ -368,10 +371,10 @@ def test_cache_is_shared_across_archive_opens(hb_archive, tmp_path):
     path = str(tmp_path / "a.prs")
     save_archive(hb_archive, path)
     cache = SegmentCache()
-    with open_archive(path, cache=cache) as sa:
+    with open_archive(path, OpenOptions(cache=cache)) as sa:
         sa.open().reconstruct("Vy", 1e-5)
         first_reads = sa.fetcher.stats.store_reads
-    with open_archive(path, cache=cache) as sa:
+    with open_archive(path, OpenOptions(cache=cache)) as sa:
         sa.open().reconstruct("Vy", 1e-5)
         assert sa.fetcher.stats.store_reads <= first_reads // 10
         assert sa.fetcher.stats.cache_hits > 0
@@ -384,11 +387,11 @@ def test_unverified_fetcher_never_populates_shared_cache(hb_archive,
     path = str(tmp_path / "a.prs")
     save_archive(hb_archive, path)
     cache = SegmentCache()
-    with open_archive(path, verify=False, cache=cache) as sa:
+    with open_archive(path, OpenOptions(verify=False, cache=cache)) as sa:
         sa.open().reconstruct("Vx", 1e-4)
         assert cache.stats.insertions == 0
         assert len(cache) == 0
-    with open_archive(path, verify=True, cache=cache) as sa:
+    with open_archive(path, OpenOptions(verify=True, cache=cache)) as sa:
         sa.open().reconstruct("Vx", 1e-4)
         assert cache.stats.insertions > 0
 

@@ -14,6 +14,7 @@ from tests._hypothesis_shim import given, settings, strategies as st
 
 from repro.core.refactor import METHODS, refactor_variables
 from repro.data.synthetic import ge_like_fields
+from repro.options import OpenOptions, SessionOptions
 from repro.store import SegmentCache, memory_store_archive, segment_depth
 from repro.store.cache import _MAX_BAND
 
@@ -44,7 +45,7 @@ def test_quarter_budget_bit_identical_all_methods(method):
     else:
         budget = 1 << 20     # snapshot readers: knob accepted, unused
     with memory_store_archive(arch) as sa:
-        bounded = sa.open(contrib_budget_bytes=budget)
+        bounded = sa.open(SessionOptions.memory_bounded(budget))
         for eps in EPS_LADDER:
             for v in vel:
                 a, ba = unbounded.reconstruct(v, eps)
@@ -59,7 +60,7 @@ def test_zero_budget_degrades_to_recompute_always():
     the cached reconstruction without touching the streams."""
     vel = {"Vx": _vel_fields()["Vx"]}
     arch = refactor_variables(vel, method="hb")
-    ref, zero = arch.open(), arch.open(contrib_budget_bytes=0)
+    ref, zero = arch.open(), arch.open(SessionOptions.memory_bounded(0))
     for eps in EPS_LADDER:
         a, _ = ref.reconstruct("Vx", eps)
         b, _ = zero.reconstruct("Vx", eps)
@@ -82,7 +83,7 @@ def test_tiny_budget_bounds_peak_and_counts_recomputes():
     arch = refactor_variables(vel, method="hb")
     var = arch.variables["Vx"]
     field = int(np.prod(var.padded_shape)) * 8
-    session = arch.open(contrib_budget_bytes=2 * field)
+    session = arch.open(SessionOptions.memory_bounded(2 * field))
     for eps in EPS_LADDER:
         session.reconstruct("Vx", eps)
     reader = session.readers["Vx"]
@@ -105,7 +106,7 @@ def test_budget_full_requirement_never_spills():
     arch = refactor_variables(vel, method="hb")
     var = arch.variables["Vx"]
     full = (var.levels + 1) * int(np.prod(var.padded_shape)) * 8
-    session = arch.open(contrib_budget_bytes=full)
+    session = arch.open(SessionOptions.memory_bounded(full))
     for eps in EPS_LADDER:
         session.reconstruct("Vx", eps)
     st_ = session.contrib_stats()
@@ -119,7 +120,7 @@ def test_store_backed_counters_land_in_fetch_stats():
     object."""
     arch = refactor_variables(_vel_fields(), method="hb")
     with memory_store_archive(arch) as sa:
-        session = sa.open(contrib_budget_bytes=0)
+        session = sa.open(SessionOptions.memory_bounded(0))
         for v in ("Vx", "Vy"):
             session.reconstruct(v, 1e-4)
         assert sa.fetcher.stats.contrib_spills > 0
@@ -132,7 +133,7 @@ def test_resolution_progression_unaffected_by_budget():
     vel = {"Vx": _vel_fields()["Vx"]}
     arch = refactor_variables(vel, method="hb")
     a, ba = arch.open().reconstruct_at_resolution("Vx", 2, 1e-4)
-    b, bb = arch.open(contrib_budget_bytes=0) \
+    b, bb = arch.open(SessionOptions.memory_bounded(0)) \
         .reconstruct_at_resolution("Vx", 2, 1e-4)
     assert np.array_equal(a, b) and ba == bb
 
@@ -296,8 +297,8 @@ def test_distinct_archives_isolated_through_fetcher():
     floor = 4 << 10
     cache = SegmentCache(max_bytes=48 << 10, depth_weight=0.0,
                          archive_floor_bytes=floor)
-    with memory_store_archive(a1, cache=cache) as s1, \
-            memory_store_archive(a2, cache=cache) as s2:
+    with memory_store_archive(a1, OpenOptions(cache=cache)) as s1, \
+            memory_store_archive(a2, OpenOptions(cache=cache)) as s2:
         assert s1.archive_id != s2.archive_id
         s1.open().reconstruct("Vx", 1e-6)
         assert cache.archive_nbytes(s1.archive_id) > floor

@@ -30,6 +30,7 @@ import pytest
 from repro.core.refactor import ContribStats, refactor_variables
 from repro.data.synthetic import ge_like_fields
 from repro.launch.serve import Request, RetrievalServer, ensure_archive
+from repro.options import OpenOptions, SessionOptions
 from repro.serve import (ContribBudgetPool, LatencyHistogram,
                          ReconstructCoalescer, ServePlane,
                          ServerOverloadedError, render_metrics)
@@ -82,7 +83,7 @@ def test_coalesced_duplicates_fetch_each_segment_once(vel, hb_archive):
     # baseline: the store reads one session alone needs (prediction off so
     # the count is deterministic)
     with memory_store_archive(hb_archive) as sa:
-        s = sa.open(prefetch_depth=0)
+        s = sa.open(SessionOptions(prefetch_depth=0))
         s.reconstruct(var, eps)
         baseline_reads = sa.fetcher.stats.store_reads
 
@@ -98,7 +99,7 @@ def test_coalesced_duplicates_fetch_each_segment_once(vel, hb_archive):
     coal = ReconstructCoalescer()
     sessions = []
     for _ in range(n_dup):
-        s = sa.open(prefetch_depth=0)
+        s = sa.open(SessionOptions(prefetch_depth=0))
         s.coalescer = coal
         sessions.append(s)
     store.gate.clear()          # now pin the leader's first fetch
@@ -147,7 +148,8 @@ def test_concurrent_results_bit_identical_to_sequential(vel, hb_archive):
     ladder = (1e-2, 1e-6)
     reqs = [(f"c{i}", v, eps) for i, (v, eps) in enumerate(
         (v, e) for e in ladder for v in sorted(vel) for _ in range(3))]
-    with memory_store_archive(hb_archive, cache=SegmentCache()) as sa:
+    with memory_store_archive(hb_archive,
+                              OpenOptions(cache=SegmentCache())) as sa:
         coal = ReconstructCoalescer()
         sessions = {}
         mu = threading.Lock()
@@ -363,8 +365,8 @@ def test_pooled_budget_bit_identical_and_released_on_close(vel, hb_archive):
     unbounded = hb_archive.open()
     pool = ContribBudgetPool(total_bytes=64 << 10, depth_weight=4.0)
     with memory_store_archive(hb_archive) as sa:
-        s1 = sa.open(contrib_pool=pool)
-        s2 = sa.open(contrib_pool=pool)
+        s1 = sa.open(SessionOptions.pooled(pool))
+        s2 = sa.open(SessionOptions.pooled(pool))
         for eps in (1e-2, 1e-4, 1e-6):
             for v in sorted(vel):
                 want, want_bound = unbounded.reconstruct(v, eps)
@@ -416,7 +418,7 @@ def test_one_fetcher_many_threads_bit_identical(vel, hb_archive):
     shared FetchStats sink, shared cache) from concurrent threads — every
     result bit-identical, accounting self-consistent."""
     with memory_store_archive(hb_archive,
-                              cache=SegmentCache()) as sa:
+                              OpenOptions(cache=SegmentCache())) as sa:
         want = {(v, e): hb_archive.open().reconstruct(v, e)
                 for v in sorted(vel) for e in (1e-3, 1e-6)}
         errors = []

@@ -10,6 +10,7 @@ from repro.core import ge
 from repro.core.refactor import METHODS, refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
+from repro.options import OpenOptions
 from repro.store import (
     ChecksumError,
     FileByteStore,
@@ -149,7 +150,7 @@ def test_checksum_corruption_detected(tmp_path):
             sa.fetcher.fetch(key)
     # verify=False trusts the transport (decode may still fail downstream,
     # but the fetch itself must not raise)
-    with open_archive(path, verify=False) as sa:
+    with open_archive(path, OpenOptions.unverified()) as sa:
         sa.fetcher.fetch(key)
 
 
@@ -173,7 +174,8 @@ def test_corruption_surfaces_through_retrieval(tmp_path):
     # is spent (the crc failure re-surfaces each attempt), then the stream
     # pins at the deepest verified plane prefix and the session reports a
     # certified degraded result instead of raising mid-reconstruct.
-    with open_archive(path, retry_policy=RetryPolicy.none()) as sa:
+    with open_archive(path,
+                      OpenOptions(retry_policy=RetryPolicy.none())) as sa:
         st = sa.open()
         for v in vel:                # full-precision pull touches everything
             data, ach = st.reconstruct(v, 1e-15)
@@ -199,8 +201,8 @@ def test_prefetch_equals_no_prefetch_on_arbitrary_schedule(tmp_path):
     rng = np.random.default_rng(7)
     schedule = [(str(rng.choice(list(vel))), float(10.0 ** -rng.integers(1, 8)))
                 for _ in range(24)]
-    with open_archive(path, prefetch_workers=0) as plain_arch, \
-            open_archive(path, prefetch_workers=3) as pf_arch:
+    with open_archive(path, OpenOptions(prefetch_workers=0)) as plain_arch, \
+            open_archive(path, OpenOptions(prefetch_workers=3)) as pf_arch:
         plain, pf = plain_arch.open(), pf_arch.open()
         for name, eps in schedule:
             # over-eager hints: future eps the schedule may never request
@@ -220,7 +222,7 @@ def test_qoi_retrieval_store_vs_memory_with_prefetch(tmp_path):
     save_archive(arch, path)
     reqs = [QoIRequest("VTOT", ge.v_total(), 1e-4)]
     ref = retrieve_qoi_controlled(arch.open(), reqs)
-    with open_archive(path, prefetch_workers=2) as sa:
+    with open_archive(path, OpenOptions(prefetch_workers=2)) as sa:
         res = retrieve_qoi_controlled(sa.open(), reqs)
         for v in vel:
             np.testing.assert_array_equal(ref.values[v], res.values[v])
@@ -237,7 +239,7 @@ def test_snapshot_prefetch_respects_never_go_backwards(tmp_path):
     arch = refactor_variables(vel, method="psz3")
     path = str(tmp_path / "a.prs")
     save_archive(arch, path)
-    with open_archive(path, prefetch_workers=2) as sa:
+    with open_archive(path, OpenOptions(prefetch_workers=2)) as sa:
         st = sa.open()
         st.reconstruct("Vx", 1e-6)          # tight snapshot decoded
         moved = sa.fetcher.stats.bytes_fetched
@@ -254,7 +256,7 @@ def test_snapshot_prefetch_hint(method, tmp_path):
     arch = refactor_variables(vel, method=method)
     path = str(tmp_path / "a.prs")
     save_archive(arch, path)
-    with open_archive(path, prefetch_workers=2) as sa:
+    with open_archive(path, OpenOptions(prefetch_workers=2)) as sa:
         st = sa.open()
         st.prefetch("Vx", 1e-4)
         sa.fetcher.drain()
