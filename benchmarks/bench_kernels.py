@@ -73,6 +73,31 @@ def _codec_rows():
     exact = bool(np.array_equal(decode_magnitudes(lbp, nbits), mag))
     rows.append(("kernels/codec_vs_legacy_magnitudes_exact", 0.0,
                  f"exact={exact}"))
+
+    # device-resident fused decode: unpack + sign + scale as ONE jit
+    # dispatch (vs the host pair decode_magnitudes -> decode_values)
+    from repro.bitplane.encoder import (decode_values, inflate_planes,
+                                        sign_plane_bytes)
+    from repro.kernels import ops as kops
+    words, shifts = inflate_planes(n, nbits, lbp.planes[:k], 0)
+    sb = sign_plane_bytes(n, lbp.signs)
+    scale = np.float64(2.0) ** (lbp.exponent - nbits)
+
+    def host_decode():
+        return decode_values(lbp, decode_magnitudes(lbp, k))
+
+    def fused_decode():
+        _, vals = kops.decode_values_fused(words, shifts, None, sb, scale, n)
+        return np.asarray(vals)      # include the device->host readback
+
+    fused_decode()                   # warm-up: compile is one-off per shape
+    dt_host = best_of(host_decode)
+    dt_fused = best_of(fused_decode)
+    dexact = bool(np.array_equal(host_decode().view(np.uint64),
+                                 fused_decode().view(np.uint64)))
+    rows.append((f"kernels/device_decode/n={n}/k={k}", dt_fused * 1e6,
+                 f"speedup_vs_host={dt_host / dt_fused:.2f}x;"
+                 f"exact={dexact}"))
     return rows
 
 

@@ -18,6 +18,15 @@ What these rows watch across PRs:
     ``tail`` = p99/p50.  Queueing convoys (a lost per-session lock, an
     accidental global serialization) show up here before they show in the
     mean.
+  * ``serve/batched_tick/clients=64/workers=8`` — the same 64 requests
+    submitted round-robin across (var, eps) groups (the mixed-tenant tick
+    shape) through the full stack: pool + coalescer + a shared
+    ``DecodeBatcher``, every group on the fused device-decode path.
+    Distinct flights run on distinct workers and their fused decode
+    flushes / device recomposes merge into vmapped dispatches per batching
+    window.  ``dispatch_ratio`` (decode items per device dispatch, from
+    BatcherStats) must hold >= 2 — the batching claim — with wall time
+    still well under the sequential baseline (``speedup_vs_seq``).
 
 Both modes run the SAME request schedule and per-client sticky sessions;
 the workload mixes duplicate (var, eps) tightens across clients — the
@@ -36,7 +45,8 @@ import numpy as np
 
 from repro.core.refactor import refactor_variables
 from repro.data.synthetic import ge_like_fields
-from repro.serve import ReconstructCoalescer, ServePlane
+from repro.options import SessionOptions
+from repro.serve import DecodeBatcher, ReconstructCoalescer, ServePlane
 from repro.store import MemoryByteStore, RemoteByteStore, SegmentCache
 from repro.store.container import StoreArchive, build_sharded_container
 
@@ -45,6 +55,7 @@ WORKERS = 8
 LATENCY_S = 2e-4              # LAN round-trip per request (propagation)
 BANDWIDTH_BPS = 400e6         # shared-link wire rate, FIFO
 EPS_LADDER = (1e-3, 1e-6)
+BATCH_WINDOW_MS = 30.0        # decode-batching window for the batched row
 
 
 def _schedule(variables):
@@ -62,12 +73,33 @@ def _schedule(variables):
     return reqs
 
 
+def _interleave(reqs, width=3):
+    """Round-robin the schedule across (var, eps) groups, ``width`` requests
+    per group per cycle: nearby requests hit DISTINCT reconstructions, so
+    the worker pool runs several different flights at once — the
+    mixed-tenant tick shape the decode batcher exists for (a fully bursty
+    order leaves the batcher nothing to merge: the coalescer collapses the
+    duplicates and its few leaders barely overlap).  ``width`` > 1 keeps a
+    duplicate adjacent to its leader so coalescing still collapses most
+    repeat work."""
+    groups = {}
+    for r in reqs:
+        groups.setdefault((r[1], r[2]), []).append(r)
+    out, queues = [], list(groups.values())
+    while len(out) < len(reqs):
+        for q in queues:
+            out.extend(q[:width])
+            del q[:width]
+    return out
+
+
 class _MiniServer:
     """The serve-plane stack minus the CLI: one StoreArchive over the modelled link
     model, a cross-session SegmentCache, sticky per-client sessions, and —
     in pooled mode — a ServePlane plus cross-session coalescer."""
 
-    def __init__(self, manifest, payload, workers=None, coalesce=False):
+    def __init__(self, manifest, payload, workers=None, coalesce=False,
+                 decode_batcher=None):
         self.remote = RemoteByteStore(MemoryByteStore(payload),
                                       latency_s=LATENCY_S,
                                       bandwidth_bps=BANDWIDTH_BPS)
@@ -75,6 +107,7 @@ class _MiniServer:
         self.archive = StoreArchive(manifest, self.remote,
                                     prefetch_workers=2, cache=self.cache)
         self.coalescer = ReconstructCoalescer() if coalesce else None
+        self.decode_batcher = decode_batcher
         self.sessions = {}
         self._mu = threading.Lock()
         self.results = {}
@@ -82,14 +115,16 @@ class _MiniServer:
         if workers is not None:
             self.plane = ServePlane(self.handle, workers=workers,
                                     queue_depth=4 * N_CLIENTS,
-                                    session_key=lambda r: r[0])
+                                    session_key=lambda r: r[0],
+                                    decode_batcher=decode_batcher)
 
     def handle(self, req):
         client, var, eps = req
         with self._mu:
             session = self.sessions.get(client)
             if session is None:
-                session = self.archive.open()
+                session = self.archive.open(SessionOptions(
+                    decode_batcher=self.decode_batcher))
                 session.coalescer = self.coalescer
                 self.sessions[client] = session
         data, achieved = session.reconstruct(var, eps)
@@ -118,13 +153,16 @@ def run():
     reqs = _schedule(variables)
 
     # untimed warmup: reader jit + codec dispatch, off the link model, so
-    # the sequential row isn't charged for first-touch compilation
+    # the sequential row isn't charged for first-touch compilation.  A
+    # fresh session per rung matches the clients' one-shot fetch shapes
+    # (each timed client jumps straight to its eps from a cold state).
     warm = StoreArchive(manifest, MemoryByteStore(payload),
                         prefetch_workers=2)
     try:
-        s = warm.open()
-        for v in variables:
-            s.reconstruct(v, min(EPS_LADDER))
+        for eps in EPS_LADDER:
+            s = warm.open()
+            for v in variables:
+                s.reconstruct(v, eps)
     finally:
         warm.close()
 
@@ -161,6 +199,40 @@ def run():
     finally:
         pool.close()
 
+    # batched tick: the interleaved schedule through pool + coalescer +
+    # shared DecodeBatcher merging concurrent flights' device work.  One
+    # untimed pass first compiles the vmapped batch graphs (batch sizes
+    # are padded to powers of two, so the timed pass reuses them even when
+    # bucket compositions differ).
+    # every group rides the batcher here (not just the >= FUSED_MIN_COUNT
+    # ones "auto" picks): a reader's small same-shape levels stack into one
+    # vmapped dispatch alongside its neighbours' — the per-tick dispatch
+    # collapse the row exists to measure
+    from repro.kernels import ops
+    bat_reqs = _interleave(reqs)
+    prev_path = ops.set_decode_path("fused")
+    try:
+        for timed_pass in (False, True):
+            bat = DecodeBatcher(window_ms=BATCH_WINDOW_MS)
+            srv = _MiniServer(manifest, payload, workers=WORKERS,
+                              coalesce=True, decode_batcher=bat)
+            try:
+                t0 = time.perf_counter()
+                futures = [srv.plane.submit(req) for req in bat_reqs]
+                for fut in futures:
+                    fut.result()
+                bat_wall = time.perf_counter() - t0
+                bs = bat.stats.as_dict()
+                for req in reqs:    # bit-identity: batching must not show
+                    np.testing.assert_array_equal(srv.results[req],
+                                                  seq_results[req])
+            finally:
+                srv.close()
+    finally:
+        ops.set_decode_path(prev_path)
+    decode_ratio = (bs["decode_items"] / bs["decode_dispatches"]
+                    if bs["decode_dispatches"] else 0.0)
+
     speedup = seq_wall / pool_wall
     p50, p99 = pm["latency_p50_ms"], pm["latency_p99_ms"]
     tail = p99 / p50 if p50 > 0 else float("inf")
@@ -177,6 +249,15 @@ def run():
         (f"serve/tail/clients={N_CLIENTS}/workers={WORKERS}", p99 * 1e3,
          f"tail={tail:.2f};p50={p50:.1f}ms;p99={p99:.1f}ms;"
          f"shed={pm['shed_total']:.0f}"),
+        (f"serve/batched_tick/clients={N_CLIENTS}/workers={WORKERS}",
+         bat_wall * 1e6,
+         f"speedup_vs_seq={seq_wall / bat_wall:.2f}x;"
+         f"dispatch_ratio={decode_ratio:.2f};"
+         f"decode_items={bs['decode_items']:.0f};"
+         f"decode_dispatches={bs['decode_dispatches']:.0f};"
+         f"recompose_items={bs['recompose_items']:.0f};"
+         f"recompose_dispatches={bs['recompose_dispatches']:.0f};"
+         f"window_ms={BATCH_WINDOW_MS:g}"),
     ]
 
 

@@ -156,13 +156,7 @@ def accumulate_planes(count: int, nbits: int, blobs: Sequence[bytes],
     mag = state if state is not None else np.zeros(count, dtype=np.uint64)
     if not blobs:
         return mag
-    nwords = (count + 31) // 32
-    words = np.empty((len(blobs), nwords), dtype=np.uint32)
-    for i, blob in enumerate(blobs):
-        words[i] = _inflate_plane(blob, nwords)
-    shifts = np.asarray([nbits - 1 - b
-                         for b in range(start, start + len(blobs))],
-                        dtype=np.int64)
+    words, shifts = inflate_planes(count, nbits, blobs, start)
     mag |= ops.unpack_bitplanes(words, shifts, count)
     return mag
 
@@ -201,6 +195,50 @@ def decode_values(lbp: LevelBitplanes, mag: np.ndarray) -> np.ndarray:
     """Magnitude state + signs -> float64 coefficient values."""
     return values_from_planes(lbp.count, lbp.exponent, lbp.nbits, mag,
                               lbp.signs)
+
+
+def inflate_planes(count: int, nbits: int, blobs: Sequence[bytes],
+                   start: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Encoded plane blobs -> ((P, W) uint32 packed words, (P,) shifts) ready
+    for the device decode paths (``ops.unpack_bitplanes`` /
+    ``ops.decode_values_fused``).  Pure inflation — no bit arithmetic — so
+    both paths consume the exact same words."""
+    nwords = (count + 31) // 32
+    words = np.empty((len(blobs), nwords), dtype=np.uint32)
+    for i, blob in enumerate(blobs):
+        words[i] = _inflate_plane(blob, nwords)
+    shifts = np.asarray([nbits - 1 - b
+                         for b in range(start, start + len(blobs))],
+                        dtype=np.int64)
+    return words, shifts
+
+
+def sign_plane_bytes(count: int, signs_blob: bytes) -> np.ndarray:
+    """Decoded packbits(c < 0) bytes for the fused device decode."""
+    return np.frombuffer(decode_sign_blob(signs_blob, (count + 7) // 8),
+                         dtype=np.uint8)
+
+
+def decode_prefix(lbp: LevelBitplanes, k: int) -> np.ndarray:
+    """First-k-planes decode: the ONE entry every non-streaming consumer
+    (checkpoint restore, tests, tools) should call.  Honors the decode-path
+    knob (``ops.set_decode_path``): under "fused"/"auto" the unpack, sign
+    application and value scaling run as a single jit dispatch on device;
+    otherwise it routes through the host/kernel ``decode_magnitudes`` →
+    ``decode_values`` pair.  All paths are integer-exact and the scale is a
+    power of two, so the result is bit-identical regardless of path."""
+    if lbp.exponent is None:
+        return np.zeros(lbp.count, dtype=np.float64)
+    k = min(k, lbp.nbits)
+    if ops.use_fused_decode(lbp.count):
+        words, shifts = inflate_planes(lbp.count, lbp.nbits,
+                                       lbp.planes[:k], 0)
+        scale = np.float64(2.0) ** (lbp.exponent - lbp.nbits)
+        _, vals = ops.decode_values_fused(
+            words, shifts, None, sign_plane_bytes(lbp.count, lbp.signs),
+            scale, lbp.count)
+        return np.asarray(vals)
+    return decode_values(lbp, decode_magnitudes(lbp, k))
 
 
 def plane_bound(lbp: LevelBitplanes, k: int) -> float:

@@ -25,10 +25,23 @@ from repro.bitplane.encoder import (
     LevelBitplanes,
     PlaneGroupMeta,
     accumulate_planes,
+    inflate_planes,
     plane_bound,
     planes_needed,
+    sign_plane_bytes,
     values_from_planes,
 )
+from repro.kernels import ops
+
+
+class _Ready:
+    """Trivial ticket for a decode dispatched inline (no batcher)."""
+
+    def __init__(self, res):
+        self._res = res
+
+    def result(self):
+        return self._res
 
 
 @dataclass
@@ -89,20 +102,32 @@ class InMemoryPlaneSource(PlaneSource):
 class LevelStream:
     """Progressive reader state over one group's PlaneSource."""
 
-    def __init__(self, source: Union[PlaneSource, LevelBitplanes]):
+    def __init__(self, source: Union[PlaneSource, LevelBitplanes],
+                 batcher=None):
         if isinstance(source, LevelBitplanes):
             source = InMemoryPlaneSource(source)
         self.source = source
         self.meta = source.meta
+        self.batcher = batcher        # serve.DecodeBatcher or None
         self.fetched = 0
         self.bytes_fetched = 0
         # degraded mode: deepest reachable plane count once a segment of
         # this group proved permanently unavailable (None = fully available)
         self.pinned: Optional[int] = None
         self.pin_error: Optional[BaseException] = None
-        self._mag: Optional[np.ndarray] = None
+        # _mag is dual-representation: host (count,) uint64 on the host
+        # path, or a device-resident full-word-length (W*32,) uint64 array
+        # on the fused path (keeps jit cache keys count-independent and the
+        # state on device across incremental flushes)
+        self._mag = None
         self._signs: Optional[bytes] = None
+        self._sign_bytes: Optional[np.ndarray] = None
         self._values: Optional[np.ndarray] = None
+        self._values_dev = None
+        # fused path defers decode: newly fetched planes pile up here and
+        # flush in ONE jit dispatch at the next values()/values_device()
+        self._pending_words: list = []
+        self._pending_shifts: list = []
 
     def _pin(self, k: int, err: BaseException) -> None:
         self.pinned = k
@@ -135,11 +160,23 @@ class LevelStream:
         if self.fetched == 0 and got > 0:
             new_bytes += meta.sign_size
         if blobs:
-            self._mag = accumulate_planes(meta.count, meta.nbits, blobs,
-                                          self.fetched, state=self._mag)
+            if ops.use_fused_decode(meta.count):
+                # defer: inflate now (cheap, host) but leave the bit-OR +
+                # sign + scale to one fused device dispatch at flush time;
+                # byte accounting above is already settled, so deferral
+                # never changes FetchStats
+                words, shifts = inflate_planes(meta.count, meta.nbits,
+                                               blobs, self.fetched)
+                self._pending_words.append(words)
+                self._pending_shifts.append(shifts)
+            else:
+                self._mag = accumulate_planes(meta.count, meta.nbits, blobs,
+                                              self.fetched,
+                                              state=self._host_mag())
             self.fetched = got
             self.bytes_fetched += new_bytes
             self._values = None
+            self._values_dev = None
         if err is not None:
             self._pin(self.fetched, err)
         return new_bytes if blobs else 0
@@ -160,14 +197,84 @@ class LevelStream:
         if k > self.fetched:
             self.source.prefetch(self.fetched, k, certain=certain)
 
+    def _host_mag(self) -> Optional[np.ndarray]:
+        """Normalize the magnitude state to host (count,) uint64, folding any
+        deferred planes through the host unpack (integer-exact, so the value
+        is independent of which path folds them)."""
+        count = self.meta.count
+        mag = self._mag
+        if mag is not None and (not isinstance(mag, np.ndarray)
+                                or mag.shape != (count,)):
+            mag = np.asarray(mag)[:count].copy()
+        for words, shifts in zip(self._pending_words, self._pending_shifts):
+            if mag is None:
+                mag = np.zeros(count, dtype=np.uint64)
+            mag |= ops.unpack_bitplanes(words, shifts, count)
+        self._pending_words.clear()
+        self._pending_shifts.clear()
+        self._mag = mag
+        return mag
+
+    def _decoded_signs(self) -> np.ndarray:
+        if self._sign_bytes is None:
+            self._sign_bytes = sign_plane_bytes(self.meta.count, self._signs)
+        return self._sign_bytes
+
+    def flush_submit(self):
+        """Phase 1 of the fused flush: hand the deferred planes to the
+        decode batcher (or dispatch inline when there is none).  Returns an
+        opaque ticket for ``flush_collect``, or None when nothing is
+        pending.  Split in two so a caller draining many streams can submit
+        them all before collecting — one batched dispatch instead of one
+        per stream."""
+        if not self._pending_words:
+            return None
+        meta = self.meta
+        words = np.concatenate(self._pending_words, axis=0)
+        shifts = np.concatenate(self._pending_shifts)
+        self._pending_words.clear()
+        self._pending_shifts.clear()
+        scale = np.float64(2.0) ** (meta.exponent - meta.nbits)
+        sb = self._decoded_signs()
+        if self.batcher is not None:
+            return self.batcher.submit_decode(words, shifts, self._mag, sb,
+                                              scale, meta.count)
+        return _Ready(ops.decode_values_fused(words, shifts, self._mag, sb,
+                                              scale, meta.count))
+
+    def flush_collect(self, ticket) -> None:
+        """Phase 2: adopt the fused decode result (device magnitude state +
+        device values)."""
+        if ticket is None:
+            return
+        mag, vals = ticket.result()
+        self._mag = mag
+        self._values_dev = vals
+
+    def _flush(self) -> None:
+        self.flush_collect(self.flush_submit())
+
+    def values_device(self):
+        """Device-resident float64 values when the fused path produced them
+        (None otherwise) — lets the reader feed ``scatter_recompose_from``
+        without a host round-trip."""
+        if self.fetched == 0:
+            return None
+        self._flush()
+        return self._values_dev
+
     def values(self) -> np.ndarray:
         if self._values is None:
             if self.fetched == 0:
                 self._values = np.zeros(self.meta.count, dtype=np.float64)
             else:
-                self._values = values_from_planes(
-                    self.meta.count, self.meta.exponent, self.meta.nbits,
-                    self._mag, self._signs)
+                self._flush()
+                if self._values_dev is not None:
+                    self._values = np.asarray(self._values_dev)
+                else:
+                    self._values = values_from_planes(
+                        self.meta.count, self.meta.exponent, self.meta.nbits,
+                        self._host_mag(), self._signs)
         return self._values
 
     @property
@@ -181,4 +288,8 @@ class LevelStream:
         self.pin_error = None
         self._mag = None
         self._signs = None
+        self._sign_bytes = None
         self._values = None
+        self._values_dev = None
+        self._pending_words.clear()
+        self._pending_shifts.clear()

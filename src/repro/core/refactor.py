@@ -78,6 +78,7 @@ from repro.transform.hierarchical import (
     pad_to_grid,
     recompose_hb,
     recompose_hb_from,
+    scatter_recompose_from,
     unpad,
 )
 from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
@@ -206,7 +207,8 @@ class BitplaneVarArchive:
                                         "BitplaneVarArchive.open_reader")
         return _BitplaneVarReader(
             self, contrib_budget_bytes=opts.contrib_budget_bytes,
-            contrib_pool=opts.contrib_pool)
+            contrib_pool=opts.contrib_pool,
+            decode_batcher=opts.decode_batcher)
 
 
 @dataclass
@@ -330,9 +332,12 @@ class _BitplaneVarReader:
     """
 
     def __init__(self, var, contrib_budget_bytes: Optional[int] = None,
-                 contrib_stats=None, contrib_pool=None):
+                 contrib_stats=None, contrib_pool=None, decode_batcher=None):
         self.var = var
-        self.streams = [LevelStream(src) for src in var.plane_sources()]
+        self._batcher = decode_batcher
+        self.streams = [LevelStream(src, batcher=decode_batcher)
+                        for src in var.plane_sources()]
+        self._idx_dev: Dict[int, object] = {}   # device group_indices cache
         self._recon: Optional[np.ndarray] = None
         self._dirty = True
         # HB incremental recomposition state (see module docstring): one
@@ -486,17 +491,53 @@ class _BitplaneVarReader:
         for s, budget in zip(self.streams, self._budgets(eps)):
             s.prefetch_to_eps(budget, certain=certain)
 
+    def _group_idx_dev(self, l: int):
+        idx = self._idx_dev.get(l)
+        if idx is None:
+            import jax.numpy as jnp
+            idx = self._idx_dev[l] = jnp.asarray(self.var.group_indices[l])
+        return idx
+
+    def _contrib_submit(self, l: int):
+        """Phase 1 of a contribution rebuild: route the scatter+recompose to
+        the device when the stream holds device-resident decoded values
+        (fused path), queueing on the shared DecodeBatcher when one is
+        attached so same-shape rebuilds across readers merge into one
+        vmapped dispatch.  Returns an opaque handle for
+        ``_contrib_collect``."""
+        shape, levels = self.var.padded_shape, self.var.levels
+        start = min(l, levels - 1)       # base group (index L) needs all steps
+        vals_dev = self.streams[l].values_device()
+        if vals_dev is None:
+            return ("host", None)
+        idx = self._group_idx_dev(l)
+        if self._batcher is not None:
+            return ("ticket", self._batcher.submit_recompose(
+                idx, vals_dev, shape, levels, start))
+        return ("array", scatter_recompose_from(idx, vals_dev, shape,
+                                                levels, start))
+
+    def _contrib_collect(self, l: int, handle) -> np.ndarray:
+        kind, h = handle
+        if kind == "ticket":
+            return np.asarray(h.result())
+        if kind == "array":
+            return np.asarray(h)
+        # host route: scatter on host, partial recompose on device — the
+        # recompose graph is shared with the device route, so both are
+        # bit-identical (pinned by tests/test_decode_conformance.py)
+        shape, levels = self.var.padded_shape, self.var.levels
+        flat = np.zeros(int(np.prod(shape)), dtype=np.float64)
+        flat[self.var.group_indices[l]] = self.streams[l].values()
+        start = min(l, levels - 1)
+        return np.asarray(recompose_hb_from(flat.reshape(shape), levels,
+                                            start))
+
     def _compute_contrib(self, l: int) -> np.ndarray:
         """Contribution of group ``l``: its decoded values scattered onto the
         padded grid, partially recomposed from its own level down.  A pure
         function of the level's decoded values — bitwise reproducible."""
-        shape = self.var.padded_shape
-        levels = self.var.levels
-        flat = np.zeros(int(np.prod(shape)), dtype=np.float64)
-        flat[self.var.group_indices[l]] = self.streams[l].values()
-        start = min(l, levels - 1)       # base group (index L) needs all steps
-        return np.asarray(recompose_hb_from(flat.reshape(shape), levels,
-                                            start))
+        return self._contrib_collect(l, self._contrib_submit(l))
 
     def _refresh_hb_incremental(self) -> None:
         """HB linearity: recompute only the per-level contributions whose
@@ -521,15 +562,28 @@ class _BitplaneVarReader:
         if not any(stale) and self._recon is not None:
             return
         st = self.contrib_stats
+        # phase 1: flush every stream's deferred fused decode, submitting
+        # them all before collecting so a shared DecodeBatcher can merge
+        # this reader's flushes — and concurrent sessions' — into one
+        # vmapped dispatch per shape bucket
+        flushes = [(s, s.flush_submit()) for s in self.streams]
+        for s, t in flushes:
+            s.flush_collect(t)
+        # phase 2: same submit-then-collect for the contribution rebuilds
+        # this refresh needs (collection happens inside the fixed-order sum)
+        pending = {}
+        for l in range(levels, -1, -1):
+            if self._contribs[l] is None or stale[l]:
+                pending[l] = self._contrib_submit(l)
         total = np.zeros(self.var.padded_shape, dtype=np.float64)
         for l in range(levels, -1, -1):       # fixed summation order
             c = self._contribs[l]
-            if c is None or stale[l]:
+            if l in pending:
                 if c is None and not stale[l]:
                     # planes did not move — an unbounded reader would have a
                     # cached field here; this rebuild is pure budget cost
                     st.contrib_note(recomputes=1)
-                c = self._compute_contrib(l)
+                c = self._contrib_collect(l, pending[l])
                 self._contrib_fetched[l] = self.streams[l].fetched
             total += c
             if self._pool is not None:

@@ -33,6 +33,65 @@ from repro.kernels.qoi_vtotal import qoi_vtotal_fused
 
 LANES = 128
 
+# -- decode-path dispatch ---------------------------------------------------
+#
+# Three independent decode implementations must agree bit-for-bit (asserted
+# by tests/test_decode_conformance.py):
+#
+#   * "host"   — the vectorized NumPy byte-plane fallback (pure integer ops);
+#   * "kernel" — the ``bitplane_unpack`` Pallas kernel (interpret mode off-
+#                TPU), magnitudes finished on host;
+#   * "fused"  — unpack + sign application + value scaling traced as ONE jit
+#                dispatch (``decode_values_fused``), mirroring the fused
+#                encode; magnitudes/values stay device-resident so they can
+#                feed recompose without a host round-trip.
+#
+# "auto" (the default) picks "fused" for groups of at least
+# ``FUSED_MIN_COUNT`` coefficients and "host" below it: every path is exact,
+# so the cutover is purely a dispatch-overhead / jit-compile-cache tradeoff
+# (tiny test groups would pay a trace per shape for nothing).
+
+DECODE_PATHS = ("auto", "fused", "kernel", "host")
+FUSED_MIN_COUNT = 4096
+_decode_path = "auto"
+
+
+def decode_path() -> str:
+    """The active decode-path policy (see DECODE_PATHS)."""
+    return _decode_path
+
+
+def set_decode_path(path: str) -> str:
+    """Select the decode path globally; returns the previous policy so tests
+    can restore it.  All paths are bit-identical — this is a dispatch knob,
+    not a semantics knob."""
+    global _decode_path
+    if path not in DECODE_PATHS:
+        raise ValueError(f"unknown decode path {path!r}; "
+                         f"expected one of {DECODE_PATHS}")
+    prev, _decode_path = _decode_path, path
+    return prev
+
+
+def use_fused_decode(count: int) -> bool:
+    """Whether a group of ``count`` coefficients decodes through the fused
+    device path under the active policy."""
+    if _decode_path == "fused":
+        return True
+    if _decode_path == "auto":
+        return count >= FUSED_MIN_COUNT
+    return False
+
+
+def _plane_pad(p: int) -> int:
+    """Pad plane counts to the next power of two so the fused decode's jit
+    cache sees a bounded set of plane-axis shapes (zero planes OR nothing
+    into the magnitudes — padding is exact)."""
+    n = 1
+    while n < p:
+        n <<= 1
+    return n
+
 
 def _pad_to(x: jnp.ndarray, mult: int, value=0):
     n = x.shape[0]
@@ -104,13 +163,15 @@ def unpack_bitplanes(words, shifts, count: int) -> np.ndarray:
     One vectorized call replaces the per-plane unpackbits loop of the legacy
     decoder.  On TPU this drives the ``bitplane_unpack`` Pallas kernel
     (shifts >= 32 via a hi/lo uint32 split); off-TPU a byte-plane NumPy
-    accumulation — integer ops only, so both paths agree exactly.
+    accumulation — integer ops only, so both paths agree exactly.  The
+    decode-path knob forces one implementation for conformance testing
+    ("kernel" runs the Pallas kernel in interpret mode off-TPU).
     """
     words = np.ascontiguousarray(words, dtype=np.uint32)
     shifts = np.asarray(shifts, dtype=np.int64)
     if count == 0 or words.shape[0] == 0:
         return np.zeros(count, dtype=np.uint64)
-    if not _interpret():
+    if _decode_path == "kernel" or not _interpret():
         return _unpack_kernel_u64(words, shifts, count)
     # Byte-plane accumulation (little-endian hosts): OR each plane into byte
     # column shift//8 of the uint64 output at sub-shift shift%8 — cheap uint8
@@ -148,6 +209,96 @@ def _unpack_kernel_u64(words: np.ndarray, shifts: np.ndarray,
                               rows=rows)
         out |= np.asarray(grp, dtype=np.uint64)[:count] << np.uint64(base)
     return out
+
+
+def _decode_fused_body(words, shifts, state, sign_bytes, scale):
+    """Traced fused decode: unpack + OR-accumulate + sign + scale.
+
+    words (P, W) uint32, shifts (P,) uint64, state (W*32,) uint64 magnitude
+    carry-in, sign_bytes (W*4,) uint8 (packbits big-endian), scale f64 — all
+    full-word-length so the jit cache keys only on (P, W).  Every op is
+    integer-exact or an exact f64 op (scale is a power of two; sign flip is
+    negation), which is what makes this path bit-identical to the host
+    decoder.
+    """
+    nplanes, nwords = words.shape
+    mag = state
+    bit_idx = jnp.arange(32, dtype=jnp.uint32)
+    for j in range(nplanes):                               # static unroll
+        bits = (words[j][:, None] >> bit_idx) & jnp.uint32(1)
+        mag = mag | (bits.reshape(nwords * 32).astype(jnp.uint64)
+                     << shifts[j])
+    sbits = (sign_bytes[:, None]
+             >> jnp.arange(7, -1, -1, dtype=jnp.uint8)) & jnp.uint8(1)
+    signs = sbits.reshape(nwords * 32).astype(bool)
+    vals = mag.astype(jnp.float64) * scale
+    vals = jnp.where(signs, -vals, vals)
+    return mag, vals
+
+
+@jax.jit
+def _decode_fused(words, shifts, state, sign_bytes, scale):
+    return _decode_fused_body(words, shifts, state, sign_bytes, scale)
+
+
+@jax.jit
+def _decode_fused_batch(words, shifts, state, sign_bytes, scale):
+    """vmapped fused decode over a (B, P, W) stack of same-shape groups —
+    one device dispatch per serve-plane tick bucket instead of one per
+    reader (see repro.serve.batch)."""
+    return jax.vmap(_decode_fused_body)(words, shifts, state, sign_bytes,
+                                        scale)
+
+
+def prepare_fused_decode(words: np.ndarray, shifts, state, sign_bytes,
+                         count: int, plane_slots: int = 0):
+    """Normalize decode inputs to the fused dispatch's full-word-length,
+    plane-padded layout.  Returns ``(words, shifts, state, sign_bytes)``
+    ready for ``_decode_fused`` (or for stacking into a batch): planes
+    padded to a power of two with zero planes (exact no-ops), state and
+    sign bytes padded to W*32 bits.  ``plane_slots`` forces at least that
+    many plane slots — the decode batcher pads every item to one uniform
+    plane count so same-width groups share a bucket (and a compiled batch
+    graph) regardless of how many planes each actually fetched.  The pad
+    happens host-side before the device transfer, so extra slots cost
+    zero-word no-ops on device, not extra dispatches.
+    """
+    words = np.ascontiguousarray(words, dtype=np.uint32)
+    nplanes, nwords = words.shape
+    p_pad = _plane_pad(max(nplanes, 1, int(plane_slots)))
+    if p_pad != nplanes:
+        words = np.pad(words, ((0, p_pad - nplanes), (0, 0)))
+    sh = np.zeros(p_pad, dtype=np.uint64)
+    sh[:nplanes] = np.asarray(shifts, dtype=np.uint64)
+    if state is None:
+        st = jnp.zeros(nwords * 32, dtype=jnp.uint64)
+    else:
+        st = jnp.asarray(state, dtype=jnp.uint64)
+        if st.shape[0] != nwords * 32:      # host-length carry-in
+            st = jnp.pad(st, (0, nwords * 32 - st.shape[0]))
+    sb = np.zeros(nwords * 4, dtype=np.uint8)
+    raw = np.asarray(sign_bytes, dtype=np.uint8)
+    sb[: raw.shape[0]] = raw
+    return words, sh, st, sb
+
+
+def decode_values_fused(words: np.ndarray, shifts, state, sign_bytes,
+                        scale: float, count: int):
+    """One fused jit dispatch from packed plane words to signed f64 values.
+
+    ``words`` (P, ceil32(count)) uint32, ``shifts`` per-plane left shifts,
+    ``state`` an optional uint64 magnitude carry-in ((count,) host array or
+    a previous dispatch's full-length device array), ``sign_bytes`` the
+    decoded (entropy-stage-inflated) packbits sign plane, ``scale`` =
+    2^(E-B).  Returns device arrays ``(mag_full, values)`` where
+    ``mag_full`` is the full-word-length magnitude state (feed it back as
+    ``state``) and ``values`` is sliced to ``count`` — still on device, so
+    it can feed scatter/recompose without a host round-trip.
+    """
+    w, sh, st, sb = prepare_fused_decode(words, shifts, state, sign_bytes,
+                                         count)
+    mag, vals = _decode_fused(w, sh, st, sb, jnp.float64(scale))
+    return mag, vals[:count]
 
 
 def level_surplus(x_even: jnp.ndarray, x_odd: jnp.ndarray,

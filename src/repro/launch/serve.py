@@ -55,7 +55,8 @@ from repro.core.refactor import ContribStats, refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
 from repro.data.synthetic import ge_like_fields
 from repro.options import OpenOptions, SessionOptions
-from repro.serve import (ContribBudgetPool, ReconstructCoalescer, ServePlane,
+from repro.serve import (ContribBudgetPool, DecodeBatcher,
+                         ReconstructCoalescer, ServePlane,
                          ServerOverloadedError)
 from repro.store import (BlobQuarantine, RetryPolicy, SegmentCache,
                          open_archive)
@@ -101,7 +102,8 @@ class RetrievalServer:
                  queue_depth: int = 64,
                  contrib_pool_bytes: Optional[int] = None,
                  cache_admission: bool = False,
-                 coalesce: bool = True):
+                 coalesce: bool = True,
+                 decode_batch_ms: Optional[float] = None):
         import threading
         t0 = time.time()
         self.cache: Optional[SegmentCache] = None
@@ -109,6 +111,11 @@ class RetrievalServer:
         self.contrib_pool = ContribBudgetPool(contrib_pool_bytes) \
             if contrib_pool_bytes is not None else None
         self.coalescer = ReconstructCoalescer() if coalesce else None
+        # one DecodeBatcher shared by every session: concurrent readers'
+        # fused decode / recompose dispatches merge into one vmapped device
+        # call per tick (None = classic per-reader dispatch)
+        self.decode_batcher = DecodeBatcher(window_ms=decode_batch_ms) \
+            if decode_batch_ms is not None else None
         if store_path is not None:
             ensure_archive(store_path,
                            lambda: refactor_variables(fields, method=method),
@@ -137,7 +144,8 @@ class RetrievalServer:
         self.qois = ge.all_qois()
         self.plane = ServePlane(self._handle, workers=workers,
                                 queue_depth=queue_depth,
-                                session_key=lambda req: req.client)
+                                session_key=lambda req: req.client,
+                                decode_batcher=self.decode_batcher)
 
     # -- request path --------------------------------------------------------
 
@@ -149,7 +157,8 @@ class RetrievalServer:
             if session is None:
                 session = self.archive.open(SessionOptions(
                     contrib_budget_bytes=self.contrib_budget_bytes,
-                    contrib_pool=self.contrib_pool))
+                    contrib_pool=self.contrib_pool,
+                    decode_batcher=self.decode_batcher))
                 session.coalescer = self.coalescer
                 self.sessions[client] = session
         return session
@@ -205,6 +214,9 @@ class RetrievalServer:
         if self.contrib_pool is not None:
             for k, v in self.contrib_pool.metrics().items():
                 out[f"pool_{k}"] = v
+        if self.decode_batcher is not None:
+            for k, v in self.decode_batcher.stats.as_dict().items():
+                out[f"batch_{k}"] = v
         if self.cache is not None:
             cs = self.cache.stats
             out.update({
@@ -274,6 +286,12 @@ def main(argv=None) -> int:
                          "shared by ALL sessions — replaces --contrib-mb; "
                          "the hottest variables keep their recompose state "
                          "resident (default: off)")
+    ap.add_argument("--batch-window-ms", type=float, default=None,
+                    help="cross-session decode batching window (ms): fused "
+                         "decode/recompose dispatches arriving within one "
+                         "window merge into a single vmapped device call "
+                         "(bit-identical results; default: off = one "
+                         "dispatch per reader)")
     ap.add_argument("--cache-admission", action="store_true",
                     help="under cache pressure, skip inserting segments "
                          "colder than everything resident (deep-LSB churn "
@@ -348,7 +366,8 @@ def main(argv=None) -> int:
                              workers=args.workers,
                              queue_depth=args.queue_depth,
                              contrib_pool_bytes=contrib_pool,
-                             cache_admission=args.cache_admission)
+                             cache_admission=args.cache_admission,
+                             decode_batch_ms=args.batch_window_ms)
     src = f"store {args.store}" if args.store else "in-memory archive"
     print(f"[server] {src} ready for {args.n} pts x5 vars in "
           f"{server.refactor_s:.2f}s "
@@ -454,6 +473,12 @@ def main(argv=None) -> int:
               f"(peak {ps['peak_borrowed_bytes'] / 2**20:.2f} MiB) over "
               f"{ps['leases']:.0f} leases, {ps['denials_total']:.0f} denials"
               f", {ps['reclaims_total']:.0f} reclaims")
+    if server.decode_batcher is not None:
+        bs = server.decode_batcher.stats.as_dict()
+        print(f"[server] decode batching: {bs['decode_items']:.0f} decode + "
+              f"{bs['recompose_items']:.0f} recompose items in "
+              f"{bs['decode_dispatches'] + bs['recompose_dispatches']:.0f} "
+              f"dispatches ({bs['dispatch_ratio']:.1f} items/dispatch)")
     if args.contrib_mb is not None or args.pool_mb is not None:
         if args.store:
             cst = server.archive.fetcher.stats

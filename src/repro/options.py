@@ -139,11 +139,16 @@ class SessionOptions:
         -identical outputs at any budget);
       * ``contrib_pool`` — server-wide
         :class:`repro.serve.budget.ContribBudgetPool` replacing the static
-        cap (takes precedence when both are set).
+        cap (takes precedence when both are set);
+      * ``decode_batcher`` — shared :class:`repro.serve.batch.DecodeBatcher`
+        merging this session's fused decode / recompose dispatches with
+        every other session's into one vmapped device call per serve tick
+        (None = per-reader dispatch; results are bit-identical either way).
     """
     prefetch_depth: int = 1
     contrib_budget_bytes: Optional[int] = None
     contrib_pool: Optional[Any] = None
+    decode_batcher: Optional[Any] = None
 
     @classmethod
     def default(cls) -> "SessionOptions":

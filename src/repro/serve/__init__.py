@@ -12,6 +12,10 @@ real service:
     clients tightening the same variable to the same eps from the same
     decode state share one fetch + one recompose; the result is fanned
     out to every waiter (bit-identical by the plane-count invariant).
+  * :mod:`repro.serve.batch`    — cross-session decode batching: one
+    vmapped fused decode + recompose dispatch per serve tick covering
+    every reader's newly fetched planes, with a per-reader fallback for
+    stragglers whose shape matches nobody.
   * :mod:`repro.serve.budget`   — server-level pooled contribution
     budget replacing the per-variable ``contrib_budget_bytes``: readers
     borrow/return field-sized leases against one pool so the hottest
@@ -23,6 +27,7 @@ real service:
 Everything here is pure stdlib + numpy; the decode/recompose layers are
 untouched except for the borrow/adopt hooks in ``core/refactor.py``.
 """
+from repro.serve.batch import BatcherStats, DecodeBatcher
 from repro.serve.budget import ContribBudgetPool, PoolStats
 from repro.serve.coalesce import CoalesceStats, ReconstructCoalescer
 from repro.serve.metrics import (LatencyHistogram, MetricsRegistry,
@@ -30,6 +35,8 @@ from repro.serve.metrics import (LatencyHistogram, MetricsRegistry,
 from repro.serve.pool import ServePlane, ServerOverloadedError
 
 __all__ = [
+    "BatcherStats",
+    "DecodeBatcher",
     "ContribBudgetPool",
     "PoolStats",
     "CoalesceStats",

@@ -23,6 +23,15 @@ advance is byte-cheap and performs NO recompose; ``adopt_reconstruction``
 then installs the shared field.  Results are bit-identical to a
 sequential single-client run at the same tolerances (asserted in
 tests/test_serve_concurrent.py).
+
+Interplay with decode batching (repro.serve.batch): the coalescer merges
+*identical* requests into one flight; the DecodeBatcher merges the device
+work of *distinct* flights.  Leaders of different (variable, eps) flights
+running on different worker threads flush their fused decodes within the
+same batching window, so one vmapped dispatch covers every flight of a
+serve tick — the two layers compose without knowing about each other
+(flights interact only through pure decode dispatches, never through
+shared mutable state).
 """
 from __future__ import annotations
 

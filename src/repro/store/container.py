@@ -374,7 +374,8 @@ class StoreBitplaneVar:
         return _BitplaneVarReader(
             self, contrib_budget_bytes=opts.contrib_budget_bytes,
             contrib_stats=self._fetcher.stats,
-            contrib_pool=opts.contrib_pool)
+            contrib_pool=opts.contrib_pool,
+            decode_batcher=opts.decode_batcher)
 
 
 class _SnapshotHandle:

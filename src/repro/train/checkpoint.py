@@ -31,7 +31,7 @@ import jax
 import numpy as np
 
 from repro.bitplane.encoder import (
-    LevelBitplanes, decode_magnitudes, decode_values, encode_level,
+    LevelBitplanes, decode_prefix, encode_level,
     plane_bound, planes_needed,
 )
 from repro.core import estimators as est
@@ -122,7 +122,10 @@ def restore_checkpoint(path: str, tau_rel: float = 0.0,
             scale = 2.0 ** lbp.exponent   # >= max|w|
             eps_abs = tau_rel * scale if tau_rel > 0 else 0.0
             k = planes_needed(lbp, eps_abs) if tau_rel > 0 else lbp.nbits
-            vals = decode_values(lbp, decode_magnitudes(lbp, k))
+            # shared decode entry point: honors the device decode-path knob
+            # (fused on-device for large tensors) and is bit-identical to
+            # the old decode_magnitudes -> decode_values pair on every path
+            vals = decode_prefix(lbp, k)
             achieved = plane_bound(lbp, k)
             moved += sum(lbp.plane_nbytes(b) for b in range(k)) \
                 + lbp.sign_nbytes

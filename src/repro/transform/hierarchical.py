@@ -180,6 +180,36 @@ def recompose_hb_from(c: Array, levels: int, start: int) -> Array:
     return _recompose_steps(c, min(start, levels - 1))
 
 
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def scatter_recompose_from(idx: Array, vals: Array,
+                           shape: Tuple[int, ...], levels: int,
+                           start: int) -> Array:
+    """Scatter one level's coefficient values into a zero field and partially
+    recompose it — the device-resident form of the reader's per-level
+    contribution (core/refactor.py::_compute_contrib).  ``idx`` holds flat
+    node indices, ``vals`` the decoded coefficients (straight off the fused
+    decode, no host round-trip).  The scatter is exact placement and the
+    recompose graph is shared with ``recompose_hb_from``, so the result is
+    bit-identical to the host scatter + recompose pair."""
+    field = jnp.zeros(int(np.prod(shape)), dtype=vals.dtype)
+    field = field.at[idx].set(vals).reshape(shape)
+    return _recompose_steps(field, min(start, levels - 1))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def scatter_recompose_from_batch(idx: Array, vals: Array,
+                                 shape: Tuple[int, ...], levels: int,
+                                 start: int) -> Array:
+    """vmapped ``scatter_recompose_from`` over a leading batch axis: one
+    dispatch recomposes the same-shaped contribution of B readers (the serve
+    plane's batched tick).  vmap only adds the batch dimension — each slice
+    runs the identical elementwise graph, so results match the per-reader
+    dispatch bit-for-bit."""
+    return jax.vmap(
+        lambda i, v: scatter_recompose_from(i, v, shape, levels, start)
+    )(idx, vals)
+
+
 def hb_error_bound(level_bounds: List[float]) -> float:
     """HB L-inf bound: Σ_l e_l (+ base bound, passed as last entry)."""
     return float(np.sum(level_bounds))

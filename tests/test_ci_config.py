@@ -299,6 +299,43 @@ def test_live_archive_bench_rows_ride_the_gate():
         "recorded delta timesteps are not measurably smaller than keyframes"
 
 
+def test_device_decode_rows_ride_the_gate():
+    """The fused device-decode kernel row and the serve-plane batched-tick
+    row are part of the committed baseline (the bench gate's --prefix
+    kernels/ and serve/ pulls pull them in), the recorded fused decode is
+    bit-exact against the host pair, and the recorded batched tick really
+    shows the dispatch collapse the batcher exists for (>= 2 decode items
+    per device dispatch at 64 clients)."""
+    import json
+    with open(os.path.join(REPO, "BENCH_kernels.json")) as fh:
+        baseline = json.load(fh)
+    dd = [n for n in baseline if n.startswith("kernels/device_decode")]
+    bt = [n for n in baseline if n.startswith("serve/batched_tick")]
+    assert dd, "kernels/device_decode row missing from baseline"
+    assert bt, "serve/batched_tick row missing from baseline"
+    derived = dict(kv.split("=", 1) for kv in
+                   baseline[dd[0]]["derived"].split(";"))
+    assert derived["exact"] == "True", \
+        "recorded fused device decode is not bit-exact vs the host pair"
+    derived = dict(kv.split("=", 1) for kv in
+                   baseline[bt[0]]["derived"].split(";"))
+    assert float(derived["dispatch_ratio"]) >= 2.0, \
+        "recorded batched tick shows no dispatch collapse (< 2 decode " \
+        "items per device dispatch)"
+
+
+def test_decode_conformance_suite_rides_in_tier1():
+    """The differential decode-conformance suite (host / kernel / fused
+    paths bit-identical across methods and plane counts) runs on every
+    tier-1 matrix leg: no `slow` marker."""
+    path = os.path.join(REPO, "tests", "test_decode_conformance.py")
+    assert os.path.exists(path)
+    with open(path, encoding="utf-8") as fh:
+        assert "mark.slow" not in fh.read(), \
+            "test_decode_conformance.py must stay in the tier-1 " \
+            "(not-slow) selection"
+
+
 def test_opener_deprecation_warning_is_an_error_in_ci():
     """pytest.ini must promote ReproDeprecationWarning to an error: with
     that filter active, ANY src/-internal call through the legacy kwarg

@@ -732,3 +732,107 @@ def test_http_bytestore_revalidates_with_if_none_match(vel, hb_archive,
             assert fresh == data + b"x"
             assert hs.stats.not_modified == 1
         assert srv.stats["not_modified"] == 1
+
+
+# --------------------------------------------------- batched decode ticks --
+
+
+def test_batched_tick_bit_identical_to_per_reader(vel):
+    """N concurrent sessions flushing their fused decodes through ONE
+    shared DecodeBatcher (the batched serve tick) reconstruct exactly what
+    per-reader dispatches produce — including a straggler variable whose
+    unique shape matches no bucket and must take the fallback path — and
+    the batcher's counters prove both routes actually ran."""
+    from repro.kernels import ops
+    from repro.serve import DecodeBatcher
+
+    prev = ops.set_decode_path("fused")
+    try:
+        fields = dict(vel)                          # Vx/Vy/Vz, same shape
+        rng = np.random.default_rng(3)
+        # 2x the element count of every other variable: its finest-level
+        # group has a word width (W=32) nothing else has, so its decode
+        # flush is a guaranteed singleton bucket -> per-reader fallback
+        fields["Wodd"] = rng.standard_normal(1 << 11)
+        archive = refactor_variables(fields, method="hb")
+        eps = 1e-6
+        reqs = [("c0", ("Vx", "Vy", "Vz")), ("c1", ("Vx", "Vy", "Vz")),
+                ("c2", ("Vx", "Vy", "Vz")), ("c3", ("Wodd",))]
+        bat = DecodeBatcher(window_ms=50.0)
+        barrier = threading.Barrier(len(reqs))
+        with memory_store_archive(archive) as sa:
+            sessions = {c: sa.open(SessionOptions(prefetch_depth=0,
+                                                  decode_batcher=bat))
+                        for c, _ in reqs}
+
+            def handle(req):
+                client, names = req
+                barrier.wait(10)        # align: one tick, every session
+                return [sessions[client].reconstruct(v, eps)
+                        for v in names]
+
+            with ServePlane(handle, workers=len(reqs), queue_depth=16,
+                            session_key=lambda r: r[0],
+                            decode_batcher=bat) as plane:
+                futs = [plane.submit(r) for r in reqs]
+                got = {r[0]: f.result(120) for r, f in zip(reqs, futs)}
+                pm = plane.metrics()
+        st = bat.stats.as_dict()
+        assert st["decode_batched"] >= 2       # same-shape groups coalesced
+        # the straggler's unique-shape groups fell back to solo dispatches
+        assert st["decode_items"] > st["decode_batched"]
+        assert st["decode_dispatches"] < st["decode_items"]
+        assert pm["batch_decode_items"] == st["decode_items"]
+        # per-reader reference: fresh fused sessions WITHOUT a batcher issue
+        # one dispatch per group flush; results must match bit-for-bit
+        for client, names in reqs:
+            ref = archive.open()
+            for (data, bound), v in zip(got[client], names):
+                want, want_bound = ref.reconstruct(v, eps)
+                assert np.array_equal(want.view(np.uint64),
+                                      data.view(np.uint64)), (client, v)
+                assert want_bound == bound
+    finally:
+        ops.set_decode_path(prev)
+
+
+def test_batcher_straggler_shapes_dispatch_solo():
+    """Deterministic fallback accounting: two concurrent submissions with
+    unmatchable shapes produce two solo dispatches and zero batched items;
+    two with equal shapes produce one vmapped dispatch covering both."""
+    from repro.bitplane.encoder import (encode_level, inflate_planes,
+                                        sign_plane_bytes)
+    from repro.serve import DecodeBatcher
+
+    def job(bat, lbp, k, out, i):
+        words, shifts = inflate_planes(lbp.count, lbp.nbits,
+                                       lbp.planes[:k], 0)
+        sb = sign_plane_bytes(lbp.count, lbp.signs)
+        scale = np.float64(2.0) ** (lbp.exponent - lbp.nbits)
+        t = bat.submit_decode(words, shifts, None, sb, scale, lbp.count)
+        out[i] = np.asarray(t.result()[1])
+
+    rng = np.random.default_rng(5)
+    small = encode_level(rng.standard_normal(40))
+    big = encode_level(rng.standard_normal(400))
+    for pair, want_batched, want_dispatches in (
+            ((small, big), 0, 2),        # straggler shapes: solo fallbacks
+            ((big, big), 2, 1)):         # equal shapes: one vmapped call
+        bat = DecodeBatcher(window_ms=25.0)
+        out = [None, None]
+        threads = [threading.Thread(target=job,
+                                    args=(bat, lbp, 17, out, i))
+                   for i, lbp in enumerate(pair)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        st = bat.stats.as_dict()
+        assert st["decode_batched"] == want_batched
+        assert st["decode_dispatches"] == want_dispatches
+        for lbp, vals in zip(pair, out):
+            from repro.bitplane.encoder import decode_magnitudes, \
+                decode_values
+            want = decode_values(lbp, decode_magnitudes(lbp, 17))
+            assert np.array_equal(want.view(np.uint64),
+                                  vals.view(np.uint64))

@@ -246,3 +246,31 @@ def test_elastic_remesh_restore(tmp_path, setup):
         lambda x, p: jnp.asarray(np.asarray(x), np.asarray(p).dtype),
         placed, params), batch)
     np.testing.assert_allclose(l_after, l_before, rtol=1e-6)
+
+
+def test_checkpoint_restore_routes_shared_decode_entry(tmp_path, setup):
+    """Regression: restore_checkpoint used to call the decode_magnitudes ->
+    decode_values pair directly, bypassing the shared decode entry point —
+    so device decode never covered checkpoint restore.  It must now route
+    through decode_prefix, i.e. honor the decode-path knob with
+    bit-identical restores on every path."""
+    from repro.kernels import ops
+
+    params, _ = setup
+    save_checkpoint(str(tmp_path), params, step=2)
+    restored = {}
+    prev = ops.decode_path()
+    try:
+        for path in ("host", "kernel", "fused"):
+            ops.set_decode_path(path)
+            restored[path], rep = restore_checkpoint(str(tmp_path),
+                                                     tau_rel=1e-4)
+            assert rep.bytes_moved < rep.bytes_full
+    finally:
+        ops.set_decode_path(prev)
+    ref = jax.tree.leaves(restored["host"])
+    for path in ("kernel", "fused"):
+        for a, b in zip(ref, jax.tree.leaves(restored[path])):
+            assert np.array_equal(
+                np.asarray(a, np.float64).view(np.uint64),
+                np.asarray(b, np.float64).view(np.uint64)), path
