@@ -15,7 +15,7 @@ from repro.core import ge
 from repro.core.qoi import Prod, Var
 from repro.core.refactor import refactor_variables
 from repro.core.retrieval import QoIRequest, retrieve_qoi_controlled
-from repro.data.synthetic import ge_like_fields, s3d_like_fields
+from repro.data.synthetic import ge_like_fields, s3d_like_fields, smooth_field
 
 METHODS = ("psz3", "psz3_delta", "hb")
 
@@ -47,6 +47,32 @@ def run():
         mid_rate = curve[len(curve) // 2][1]
         rows.append((f"rate_distortion/fig2/{method}", dt * 1e6,
                      f"bitrate@mid={mid_rate:.2f};bitrate@tight={final_rate:.2f}"))
+
+    # `ip` vs `hb`: wire bytes at EQUAL certified primary-data bound on a
+    # smooth multi-octave field — the regime the interpolation predictor
+    # targets.  These rows ride the CI bench gate (--prefix
+    # rate_distortion/ip_vs_hb) and tests/test_ci_config.py pins the
+    # committed baseline's mid-bitrate ratio <= 1, so a predictor change
+    # that loses the byte win fails the build.
+    smooth = smooth_field((257,), seed=5, lo=-3.0, hi=9.0)
+    rng_s = float(smooth.max() - smooth.min())
+    archs = {m: refactor_variables({"S": smooth}, method=m,
+                                   mask_zero_velocity=False)
+             for m in ("ip", "hb")}
+    for rel in (1e-3, 1e-5, 1e-7):
+        eps = rel * rng_s
+        nbytes, dt_total = {}, 0.0
+        for m, arch in archs.items():
+            session = arch.open()
+            dt, (data, ach) = timed(session.reconstruct, "S", eps)
+            err = np.abs(data - smooth).max()
+            assert err <= ach * (1 + 1e-9) and ach <= eps, (m, rel, err, ach)
+            nbytes[m] = session.bytes_retrieved
+            dt_total += dt
+        rows.append((f"rate_distortion/ip_vs_hb/eps={rel:.0e}",
+                     dt_total * 1e6,
+                     f"ip_bytes={nbytes['ip']};hb_bytes={nbytes['hb']};"
+                     f"ratio={nbytes['ip'] / nbytes['hb']:.3f}"))
 
     # Fig 7: single-request QoI (VTOT) per method
     for method in METHODS:

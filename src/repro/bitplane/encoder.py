@@ -78,6 +78,8 @@ class PlaneGroupMeta:
     nbits: int
     plane_sizes: Tuple[int, ...]   # encoded bytes per plane, MSB-first
     sign_size: int
+    pred_planes: Optional[int] = None  # `ip` only: planes folded into the
+                                       # encoder's closed-loop prediction
 
 
 @dataclass
@@ -90,6 +92,7 @@ class LevelBitplanes:
                                    #   codec-id byte + payload (see codecs.py)
     plane_raw_bits: int            # uncompressed bits per plane (= count)
     signs: bytes                   # codec-tagged packbits(c < 0)
+    pred_planes: Optional[int] = None  # see PlaneGroupMeta.pred_planes
     _crcs: Optional[Tuple[Tuple[int, ...], int]] = None
 
     def plane_nbytes(self, b: int) -> int:
@@ -109,7 +112,8 @@ class LevelBitplanes:
         return PlaneGroupMeta(count=self.count, exponent=self.exponent,
                               nbits=self.nbits,
                               plane_sizes=tuple(len(p) for p in self.planes),
-                              sign_size=len(self.signs))
+                              sign_size=len(self.signs),
+                              pred_planes=self.pred_planes)
 
     def segment_crcs(self) -> Tuple[Tuple[int, ...], int]:
         """(per-plane crc32c, sign crc32c) — computed lazily so the encode

@@ -184,18 +184,23 @@ class LevelStream:
     def fetch_to_eps(self, eps: float) -> int:
         return self.fetch_to_planes(planes_needed(self.meta, eps))
 
-    def prefetch_to_eps(self, eps: float, certain: bool = True) -> None:
-        """Hint the source that a request at ``eps`` is coming; a store-backed
-        source starts moving planes [fetched, planes_needed) in the
+    def prefetch_to_planes(self, k: int, certain: bool = True) -> None:
+        """Hint the source that planes up to ``k`` will be requested; a
+        store-backed source starts moving planes [fetched, k) in the
         background.  Never changes decode state or byte accounting."""
         meta = self.meta
         if meta.exponent is None:
             return
-        k = planes_needed(meta, eps)
+        k = int(np.clip(k, 0, meta.nbits))
         if self.pinned is not None:
             k = min(k, self.pinned)    # never speculate past the pin
         if k > self.fetched:
             self.source.prefetch(self.fetched, k, certain=certain)
+
+    def prefetch_to_eps(self, eps: float, certain: bool = True) -> None:
+        """Plane-count hint derived from an upcoming ``eps`` request."""
+        self.prefetch_to_planes(planes_needed(self.meta, eps),
+                                certain=certain)
 
     def _host_mag(self) -> Optional[np.ndarray]:
         """Normalize the magnitude state to host (count,) uint64, folding any

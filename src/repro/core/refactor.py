@@ -4,6 +4,10 @@ Supported progressive representations (paper §V-B):
   * "hb"         PMGARD-HB: hierarchical-basis multilevel + bitplanes (paper's
                  preferred method — tight Σ_l e_l bound)
   * "ob"         PMGARD (orthogonal basis): + L² projection, loose bound
+  * "ip"         interpolation-predicted: closed-loop residuals against the
+                 decoder's truncated reconstruction; max_g e_g bound once
+                 every group reaches its recorded prediction depth (see
+                 transform/hierarchical.py `ip` section)
   * "psz3"       multi-snapshot SZ3-like ladder
   * "psz3_delta" residual-ladder SZ3-like
 
@@ -62,7 +66,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.bitplane.encoder import LevelBitplanes, encode_level, plane_bound
+from repro.bitplane.encoder import (
+    LevelBitplanes,
+    decode_prefix,
+    encode_level,
+    plane_bound,
+    planes_needed,
+)
 from repro.bitplane.segments import InMemoryPlaneSource, LevelStream
 from repro.compressors.snapshots import (
     DeltaSnapshotArchive,
@@ -74,16 +84,27 @@ from repro.options import SessionOptions, _from_legacy
 from repro.transform.hierarchical import (
     decompose_hb,
     grid_levels,
+    ip_error_bound,
     level_map,
     pad_to_grid,
     recompose_hb,
     recompose_hb_from,
     scatter_recompose_from,
+    scatter_recompose_ip_from,
+    trunc_to_quantum,
     unpad,
 )
 from repro.transform.orthogonal import decompose_ob, ob_kappa, recompose_ob
 
-METHODS = ("hb", "ob", "psz3", "psz3_delta")
+METHODS = ("hb", "ob", "ip", "psz3", "psz3_delta")
+
+
+def _pred_planes(meta) -> int:
+    """Recorded `ip` prediction depth of a group; archives written before
+    the field existed (or non-ip groups) default to full depth — the
+    truncation becomes the identity and the contribution degenerates to
+    the plain HB form."""
+    return meta.pred_planes if meta.pred_planes is not None else meta.nbits
 
 
 def _resolve_session_options(options: Optional[SessionOptions],
@@ -185,7 +206,7 @@ class ContribStats:
 @dataclass
 class BitplaneVarArchive:
     """PMGARD-HB/OB: per-level bitplane groups over the multilevel transform."""
-    method: str                    # "hb" | "ob"
+    method: str                    # "hb" | "ob" | "ip"
     orig_shape: Tuple[int, ...]
     padded_shape: Tuple[int, ...]
     levels: int
@@ -271,7 +292,7 @@ def refactor_variables(fields: Dict[str, np.ndarray],
         shapes[name] = data.shape
         rng = float(np.max(data) - np.min(data))
         ranges[name] = rng if rng > 0 else 1.0
-        if method in ("hb", "ob"):
+        if method in ("hb", "ob", "ip"):
             variables[name] = _build_bitplane_var(data, method, nbits, max_levels)
         else:
             ladder = list(snapshot_eps) if snapshot_eps is not None else \
@@ -290,18 +311,80 @@ def _build_bitplane_var(data: np.ndarray, method: str, nbits: int,
                         max_levels: int) -> BitplaneVarArchive:
     padded, orig_shape = pad_to_grid(data)
     levels = grid_levels(padded.shape, max_levels)
-    transform = decompose_hb if method == "hb" else decompose_ob
-    coeffs = np.asarray(transform(padded, levels))
-    lmap = level_map(padded.shape, levels).ravel()
-    flat = coeffs.ravel()
-    groups, indices = [], []
-    for l in range(levels + 1):          # details 0..L-1, base = L
-        idx = np.flatnonzero(lmap == l)
-        groups.append(encode_level(flat[idx], nbits=nbits))
-        indices.append(idx)
+    if method == "ip":
+        groups, indices = _encode_ip_groups(padded, levels, nbits)
+    else:
+        transform = decompose_hb if method == "hb" else decompose_ob
+        coeffs = np.asarray(transform(padded, levels))
+        lmap = level_map(padded.shape, levels).ravel()
+        flat = coeffs.ravel()
+        groups, indices = [], []
+        for l in range(levels + 1):      # details 0..L-1, base = L
+            idx = np.flatnonzero(lmap == l)
+            groups.append(encode_level(flat[idx], nbits=nbits))
+            indices.append(idx)
     return BitplaneVarArchive(method=method, orig_shape=orig_shape,
                               padded_shape=padded.shape, levels=levels,
                               groups=groups, group_indices=indices)
+
+
+def _encode_ip_groups(padded: np.ndarray, levels: int,
+                      nbits: int) -> Tuple[List[LevelBitplanes],
+                                           List[np.ndarray]]:
+    """Closed-loop interpolation-predicted encoding (method "ip").
+
+    Groups are encoded base-first: each group's coefficients are the
+    residual of the original nodal values against the running sum of the
+    coarser groups' *decoder* contributions — the exact fixed-order sum
+    ``_refresh_hb_incremental`` replays (same prefix decode, same jit'd
+    scatter+recompose, same f64 accumulation order), so in the matched
+    regime (every group fetched to at least its recorded ``pred_planes``)
+    the decoder's prediction reproduces the encoder's bit-for-bit and the
+    error bound composes as max_g e_g instead of Σ_g e_g.  Computing the
+    prediction any other way (e.g. one joint recompose of the truncated
+    coefficient field) drifts from the decoder by ulps, which for fine
+    groups — whose residual exponents sit far below the field scale —
+    can exceed the codec's 2^{E_g-nbits} slack and break the certified
+    bound.
+
+    ``pred_planes`` per group is chosen against a single absolute
+    truncation target θ = amax_min / (2·(levels+1)) (amax_min = smallest
+    nonzero per-group HB surplus scale): kp = ceil(E_g - log2 θ), so every
+    group's prediction truncation error is <= θ and the total mismatch
+    budget across the ladder stays below amax_min/2 — residuals keep the
+    open-loop surplus scale, and the matched regime becomes reachable
+    right where the finest level starts being resolved (mid bitrates)."""
+    import jax.numpy as jnp
+    shape = padded.shape
+    lmap = level_map(shape, levels).ravel()
+    indices = [np.flatnonzero(lmap == l) for l in range(levels + 1)]
+    hb = np.asarray(decompose_hb(padded, levels)).ravel()
+    amaxes = [float(np.max(np.abs(hb[idx]))) if idx.size else 0.0
+              for idx in indices]
+    nonzero = [a for a in amaxes if a > 0.0]
+    theta = min(nonzero) / (2.0 * (levels + 1)) if nonzero else 0.0
+    x_flat = padded.ravel()
+    total = np.zeros(shape, dtype=np.float64)
+    groups: List[LevelBitplanes] = [None] * (levels + 1)
+    for l in range(levels, -1, -1):      # base first — prediction order
+        idx = indices[l]
+        resid = x_flat[idx] - total.ravel()[idx]
+        lbp = encode_level(resid, nbits=nbits)
+        if lbp.exponent is not None:
+            kp = nbits
+            if theta > 0.0:
+                kp = int(np.clip(int(np.ceil(lbp.exponent - np.log2(theta))),
+                                 0, nbits))
+            lbp.pred_planes = kp
+            if l > 0 and kp > 0:
+                u = decode_prefix(lbp, kp)
+                q = 2.0 ** (lbp.exponent - kp)
+                c = scatter_recompose_ip_from(
+                    jnp.asarray(idx), jnp.asarray(u), shape, levels,
+                    min(l, levels - 1), q)
+                total += np.asarray(c)
+        groups[l] = lbp
+    return groups, indices
 
 
 # ---------------------------------------------------------------------------
@@ -388,29 +471,46 @@ class _BitplaneVarReader:
         levels 0..coarsen-1 (the finest) are never moved. Returns the
         coarse field (strided shape) and its achieved L-inf bound relative
         to the true coarse-grid values."""
-        if self.var.method != "hb":
+        if self.var.method not in ("hb", "ip"):
             # OB's L² corrections mix finer details into coarse nodal
             # values, so a truncated reconstruction is not the nodal
-            # sub-grid — HB's level independence is what enables this.
-            raise ValueError("resolution progression requires method='hb'")
+            # sub-grid — HB's level independence (which `ip` inherits: a
+            # group's contribution never touches coarser nodes) is what
+            # enables this.
+            raise ValueError("resolution progression requires method='hb' "
+                             "or method='ip'")
         levels = self.var.levels
         coarsen = int(np.clip(coarsen, 0, levels))
         active = list(range(coarsen, levels + 1))   # coarser details + base
-        budgets = self._budgets(eps)
+        targets = self._plane_targets(eps)
         for l in active:
-            if self.streams[l].fetch_to_eps(budgets[l]):
+            if self.streams[l].fetch_to_planes(targets[l]):
                 self._dirty = True
-        flat = np.zeros(int(np.prod(self.var.padded_shape)), dtype=np.float64)
-        for l in active:
-            flat[self.var.group_indices[l]] = self.streams[l].values()
-        rec = np.asarray(recompose_hb(flat.reshape(self.var.padded_shape),
-                                      levels))
+        if self.var.method == "ip":
+            # `ip` semantics are defined by the fixed-order contribution
+            # sum (a joint recompose of truncated coefficients drifts by
+            # ulps from what the encoder's residuals were closed against)
+            rec = np.zeros(self.var.padded_shape, dtype=np.float64)
+            for l in range(levels, coarsen - 1, -1):
+                rec += self._compute_contrib(l)
+        else:
+            flat = np.zeros(int(np.prod(self.var.padded_shape)),
+                            dtype=np.float64)
+            for l in active:
+                flat[self.var.group_indices[l]] = self.streams[l].values()
+            rec = np.asarray(recompose_hb(
+                flat.reshape(self.var.padded_shape), levels))
         full = unpad(rec, self.var.orig_shape)
         coarse = full[tuple(slice(None, None, 1 << coarsen)
                             for _ in self.var.orig_shape)]
-        # bound on the sub-grid: HB coarse nodes never receive finer-level
-        # contributions, so only the active groups' bounds apply
-        achieved = float(np.sum([self.streams[l].bound for l in active]))
+        # bound on the sub-grid: HB/ip coarse nodes never receive finer-
+        # level contributions, so only the active groups' bounds apply
+        if self.var.method == "ip":
+            mism = self._ip_mismatches([s.fetched for s in self.streams])
+            achieved = ip_error_bound([self.streams[l].bound for l in active],
+                                      [mism[l] for l in active])
+        else:
+            achieved = float(np.sum([self.streams[l].bound for l in active]))
         return coarse, achieved
 
     @property
@@ -428,16 +528,70 @@ class _BitplaneVarReader:
         OB additionally divides detail budgets by (1+κ) per its bound."""
         counts = np.asarray([g.count for g in self.var.groups], dtype=float)
         weights = counts / counts.sum()
-        if self.var.method == "hb":
+        if self.var.method in ("hb", "ip"):
             return [eps * w for w in weights]
         kappa = ob_kappa(len(self.var.padded_shape))
         out = [eps * w / (1.0 + kappa) for w in weights[:-1]]
         return out + [eps * weights[-1]]
 
+    def _ip_quantum(self, l: int) -> float:
+        """Group ``l``'s prediction quantum 2^{E-kp} (0.0 for an all-zero
+        group — no truncation)."""
+        m = self.streams[l].meta
+        if m.exponent is None:
+            return 0.0
+        return 2.0 ** (m.exponent - _pred_planes(m))
+
+    def _ip_mismatches(self, depths: List[int]) -> List[float]:
+        """Per-group prediction mismatch δ_g at the given plane depths:
+        how far the decoder's truncated contribution can sit from the one
+        the encoder closed its residuals against (0 once the depth reaches
+        the recorded ``pred_planes``)."""
+        out = []
+        for s, k in zip(self.streams, depths):
+            m = s.meta
+            kp = _pred_planes(m)
+            if m.exponent is None or k >= kp:
+                out.append(0.0)
+            else:
+                out.append(2.0 ** (m.exponent - k) - 2.0 ** (m.exponent - kp))
+        return out
+
+    def _plane_targets(self, eps: float) -> List[int]:
+        """Per-group plane targets for a request at ``eps`` — a pure
+        function of (eps, static group metadata), never of fetch state, so
+        coalesced sessions compute identical targets.  hb/ob: exactly the
+        size-weighted eps split (``planes_needed`` per budget).  ip picks
+        the cheaper of two sound plans by predicted from-zero bytes:
+
+          A. the hb-style split — bound Σ_g e_g <= eps without ever
+             reaching the prediction depths (shallow requests);
+          B. matched — every group to max(pred_planes, planes_needed(eps)),
+             where the bound collapses to max_g e_g <= eps (the mid/deep-
+             bitrate win).
+        """
+        metas = [s.meta for s in self.streams]
+        ka = [planes_needed(m, b)
+              for m, b in zip(metas, self._budgets(eps))]
+        if self.var.method != "ip":
+            return ka
+        kb = [max(_pred_planes(m), planes_needed(m, eps))
+              if m.exponent is not None else 0 for m in metas]
+
+        def cost(ks):
+            return sum(sum(m.plane_sizes[:k]) + (m.sign_size if k else 0)
+                       for m, k in zip(metas, ks))
+
+        return kb if cost(kb) <= cost(ka) else ka
+
     def achieved_bound(self) -> float:
         bounds = [s.bound for s in self.streams]
         if self.var.method == "hb":
             return float(np.sum(bounds))
+        if self.var.method == "ip":
+            return ip_error_bound(
+                bounds, self._ip_mismatches([s.fetched
+                                             for s in self.streams]))
         kappa = ob_kappa(len(self.var.padded_shape))
         return float((1.0 + kappa) * np.sum(bounds[:-1]) + bounds[-1])
 
@@ -452,10 +606,14 @@ class _BitplaneVarReader:
         each group contributes its bound at the deepest reachable plane
         (the pin for degraded groups, full depth otherwise), composed
         exactly like ``achieved_bound``."""
-        bounds = [plane_bound(s.meta, s.pinned if s.pinned is not None
-                              else s.meta.nbits) for s in self.streams]
+        depths = [s.pinned if s.pinned is not None else s.meta.nbits
+                  for s in self.streams]
+        bounds = [plane_bound(s.meta, d)
+                  for s, d in zip(self.streams, depths)]
         if self.var.method == "hb":
             return float(np.sum(bounds))
+        if self.var.method == "ip":
+            return ip_error_bound(bounds, self._ip_mismatches(depths))
         kappa = ob_kappa(len(self.var.padded_shape))
         return float((1.0 + kappa) * np.sum(bounds[:-1]) + bounds[-1])
 
@@ -470,10 +628,10 @@ class _BitplaneVarReader:
                                detail=detail)
 
     def request(self, eps: float) -> Tuple[np.ndarray, float]:
-        for s, budget in zip(self.streams, self._budgets(eps)):
-            if s.fetch_to_eps(budget):
+        for s, k in zip(self.streams, self._plane_targets(eps)):
+            if s.fetch_to_planes(k):
                 self._dirty = True
-        if self.var.method == "hb":
+        if self.var.method in ("hb", "ip"):
             self._refresh_hb_incremental()
         else:
             self._refresh_full()
@@ -488,8 +646,8 @@ class _BitplaneVarReader:
         plane fetches are monotone prefixes, so a too-shallow prediction is
         always a subset of whatever is eventually consumed — but the flag is
         forwarded so the fetcher knows which cache entries it may evict."""
-        for s, budget in zip(self.streams, self._budgets(eps)):
-            s.prefetch_to_eps(budget, certain=certain)
+        for s, k in zip(self.streams, self._plane_targets(eps)):
+            s.prefetch_to_planes(k, certain=certain)
 
     def _group_idx_dev(self, l: int):
         idx = self._idx_dev.get(l)
@@ -511,6 +669,13 @@ class _BitplaneVarReader:
         if vals_dev is None:
             return ("host", None)
         idx = self._group_idx_dev(l)
+        if self.var.method == "ip":
+            q = self._ip_quantum(l)
+            if self._batcher is not None:
+                return ("ticket", self._batcher.submit_recompose(
+                    idx, vals_dev, shape, levels, start, quantum=q))
+            return ("array", scatter_recompose_ip_from(idx, vals_dev, shape,
+                                                       levels, start, q))
         if self._batcher is not None:
             return ("ticket", self._batcher.submit_recompose(
                 idx, vals_dev, shape, levels, start))
@@ -527,9 +692,21 @@ class _BitplaneVarReader:
         # recompose graph is shared with the device route, so both are
         # bit-identical (pinned by tests/test_decode_conformance.py)
         shape, levels = self.var.padded_shape, self.var.levels
-        flat = np.zeros(int(np.prod(shape)), dtype=np.float64)
-        flat[self.var.group_indices[l]] = self.streams[l].values()
+        idx = self.var.group_indices[l]
+        vals = self.streams[l].values()
         start = min(l, levels - 1)
+        flat = np.zeros(int(np.prod(shape)), dtype=np.float64)
+        if self.var.method == "ip":
+            # truncated part seeds the finer groups' prediction; the tail
+            # rides back in at this group's own nodes — the host mirror of
+            # ``scatter_recompose_ip_from``
+            t = trunc_to_quantum(vals, self._ip_quantum(l))
+            flat[idx] = t
+            out = np.array(recompose_hb_from(flat.reshape(shape), levels,
+                                             start))
+            out.ravel()[idx] += vals - t
+            return out
+        flat[idx] = vals
         return np.asarray(recompose_hb_from(flat.reshape(shape), levels,
                                             start))
 
@@ -542,7 +719,12 @@ class _BitplaneVarReader:
     def _refresh_hb_incremental(self) -> None:
         """HB linearity: recompute only the per-level contributions whose
         plane counts moved (partial recompose from that level down), then
-        re-sum in a fixed coarse->fine order.  Contributions are pure
+        re-sum in a fixed coarse->fine order.  The `ip` method rides the
+        same machinery — its contribution adds a truncation before the
+        recompose and a tail after (see ``_contrib_collect``), but remains
+        a pure function of the group's decoded values, and the fixed
+        summation order here is exactly what its encoder closed the
+        residual loop against.  Contributions are pure
         functions of each level's decoded values, so any fetch schedule
         ending at the same plane counts reconstructs bit-identically.
 
@@ -639,8 +821,8 @@ class _BitplaneVarReader:
         recomposing — the coalescer's waiter path (the leader's fetch made
         these planes cache-hot).  Returns True if any stream moved."""
         moved = False
-        for s, budget in zip(self.streams, self._budgets(eps)):
-            if s.fetch_to_eps(budget):
+        for s, k in zip(self.streams, self._plane_targets(eps)):
+            if s.fetch_to_planes(k):
                 moved = True
                 self._dirty = True
         return moved
@@ -813,11 +995,11 @@ class RetrievalSession:
                                   eps: float) -> Tuple[np.ndarray, float]:
         """Progression in resolution (paper §II): the 2^coarsen-strided
         sub-grid with an L-inf guarantee, moving only coarse-level segments
-        (PMGARD-HB archives only)."""
+        (hb/ip bitplane archives only)."""
         reader = self.readers[name]
         if not isinstance(reader, _BitplaneVarReader):
             raise ValueError("resolution progression requires a bitplane "
-                             "(hb) archive")
+                             "(hb/ip) archive")
         data, achieved = reader.reconstruct_at_resolution(coarsen, eps)
         return data, achieved
 

@@ -264,6 +264,13 @@ def prepare_fused_decode(words: np.ndarray, shifts, state, sign_bytes,
     zero-word no-ops on device, not extra dispatches.
     """
     words = np.ascontiguousarray(words, dtype=np.uint32)
+    if words.size == 0:
+        # zero-plane flush (e.g. a follow-mode refresh that moved nothing):
+        # normalize the degenerate (0,)/(0, 0) layouts to (0, W) so the
+        # no-op plane padding below keeps the group's true word width —
+        # otherwise the state/sign arrays (and any batch bucket keyed on W)
+        # would be mis-shaped
+        words = words.reshape(0, (int(count) + 31) // 32)
     nplanes, nwords = words.shape
     p_pad = _plane_pad(max(nplanes, 1, int(plane_slots)))
     if p_pad != nplanes:

@@ -11,7 +11,10 @@ each dispatch alone.  ``DecodeBatcher`` closes that gap:
   * the FIRST waiter sleeps one batching window (``window_ms``) and then
     drains everything pending, bucketing by dispatch shape —
     ``("decode", P_pad, W)`` for plane flushes and
-    ``("recompose", shape, levels, start, n_idx)`` for contributions;
+    ``("recompose", shape, levels, start, n_idx, is_ip)`` for
+    contributions (hb and `ip` items recompose through different graphs,
+    so they never share a bucket; an ip item's quantum is a traced operand
+    and does not split buckets);
   * buckets with >= 2 items go through ONE vmapped dispatch
     (``ops.decode_values_fused_batch`` / ``scatter_recompose_from_batch``);
     singletons — stragglers whose shape matched nobody — fall back to the
@@ -134,13 +137,19 @@ class DecodeBatcher:
         return t
 
     def submit_recompose(self, idx, vals, shape: Tuple[int, ...],
-                         levels: int, start: int) -> Ticket:
+                         levels: int, start: int,
+                         quantum: Optional[float] = None) -> Ticket:
         """Queue one contribution scatter+recompose
-        (``transform.hierarchical.scatter_recompose_from``)."""
+        (``transform.hierarchical.scatter_recompose_from``).  A non-None
+        ``quantum`` routes through the `ip` variant
+        (``scatter_recompose_ip_from``) — the quantum itself is a traced
+        operand, so ip items with different quanta still share a bucket;
+        only the hb/ip graph split keys the bucket."""
         key = ("recompose", tuple(shape), int(levels), int(start),
-               int(len(idx)))
+               int(len(idx)), quantum is not None)
         t = Ticket(self, "recompose", key,
-                   (idx, vals, tuple(shape), int(levels), int(start)))
+                   (idx, vals, tuple(shape), int(levels), int(start),
+                    quantum))
         with self._mu:
             self._pending.append(t)
         return t
@@ -210,7 +219,8 @@ class DecodeBatcher:
         import jax.numpy as jnp
 
         from repro.transform.hierarchical import (
-            scatter_recompose_from, scatter_recompose_from_batch)
+            scatter_recompose_from, scatter_recompose_from_batch,
+            scatter_recompose_ip_from, scatter_recompose_ip_from_batch)
         n = len(tickets)
         batched = n > 1 and self.batch_recompose
         with self.stats._mu:
@@ -220,17 +230,28 @@ class DecodeBatcher:
                 self.stats.recompose_batched += n
         if not batched:
             for t in tickets:
-                idx, vals, shape, levels, start = t.payload
-                t._finish(scatter_recompose_from(jnp.asarray(idx),
-                                                 jnp.asarray(vals),
-                                                 shape, levels, start))
+                idx, vals, shape, levels, start, quantum = t.payload
+                if quantum is None:
+                    t._finish(scatter_recompose_from(jnp.asarray(idx),
+                                                     jnp.asarray(vals),
+                                                     shape, levels, start))
+                else:
+                    t._finish(scatter_recompose_ip_from(
+                        jnp.asarray(idx), jnp.asarray(vals), shape, levels,
+                        start, jnp.float64(quantum)))
             return n
-        _, _, shape, levels, start = tickets[0].payload
+        _, _, shape, levels, start, quantum = tickets[0].payload
         padded = self._pad_pow2(tickets)
         idx_b = jnp.stack([jnp.asarray(t.payload[0]) for t in padded])
         vals_b = jnp.stack([jnp.asarray(t.payload[1]) for t in padded])
-        out = scatter_recompose_from_batch(idx_b, vals_b, shape, levels,
-                                           start)
+        if quantum is None:
+            out = scatter_recompose_from_batch(idx_b, vals_b, shape, levels,
+                                               start)
+        else:
+            q_b = jnp.asarray([t.payload[5] for t in padded],
+                              dtype=jnp.float64)
+            out = scatter_recompose_ip_from_batch(idx_b, vals_b, shape,
+                                                  levels, start, q_b)
         for i, t in enumerate(tickets):
             t._finish(out[i])
         return 1

@@ -188,10 +188,13 @@ def _bitplane_var_manifest(name: str, var: BitplaneVarArchive,
         if g.exponent is not None:
             w.add(f"{name}/g{l}/signs", g.signs, crc=sign_crc,
                   codec=blob_codec_id(g.signs))
-        groups.append({"count": g.count, "exponent": g.exponent,
-                       "nbits": g.nbits,
-                       "plane_sizes": [len(p) for p in g.planes],
-                       "sign_size": len(g.signs)})
+        spec = {"count": g.count, "exponent": g.exponent,
+                "nbits": g.nbits,
+                "plane_sizes": [len(p) for p in g.planes],
+                "sign_size": len(g.signs)}
+        if g.pred_planes is not None:       # `ip` prediction depth
+            spec["pred_planes"] = g.pred_planes
+        groups.append(spec)
     return {"kind": "bitplane", "method": var.method,
             "orig_shape": list(var.orig_shape),
             "padded_shape": list(var.padded_shape),
@@ -342,7 +345,8 @@ class StoreBitplaneVar:
             PlaneGroupMeta(count=g["count"], exponent=g["exponent"],
                            nbits=g["nbits"],
                            plane_sizes=tuple(g["plane_sizes"]),
-                           sign_size=g["sign_size"])
+                           sign_size=g["sign_size"],
+                           pred_planes=g.get("pred_planes"))
             for g in spec["groups"]]
         self._fetcher = fetcher
         self._indices: Optional[List[np.ndarray]] = None

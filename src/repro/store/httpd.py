@@ -32,7 +32,7 @@ import os
 import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 _RANGE_RE = re.compile(r"bytes=(\d*)-(\d*)$")
 
@@ -191,16 +191,43 @@ class _ArchiveHandler(BaseHTTPRequestHandler):
                 remaining -= len(chunk)
 
     @staticmethod
-    def _matches(if_none_match: Optional[str], etag: str) -> bool:
+    def _parse_etag_list(header: str) -> List[str]:
+        """Split an ``If-None-Match`` field value into opaque-tags (quotes
+        kept, ``W/`` prefixes stripped).  A naive ``split(",")`` corrupts
+        entity-tags that legally contain a comma (RFC 9110 ``etagc``
+        permits 0x2C), so the walk is quote-aware: commas only delimit
+        between quoted strings."""
+        tags, i, n = [], 0, len(header)
+        while i < n:
+            if header[i] in " \t,":
+                i += 1
+                continue
+            start = i
+            if header.startswith("W/", i):
+                i += 2
+            if i < n and header[i] == '"':
+                j = header.find('"', i + 1)
+                i = (j + 1) if j != -1 else n
+                tags.append(header[start:i])
+            else:                        # tolerate unquoted legacy tags
+                j = header.find(",", i)
+                i = j if j != -1 else n
+                tags.append(header[start:i].strip())
+        return tags
+
+    @classmethod
+    def _matches(cls, if_none_match: Optional[str], etag: str) -> bool:
         """RFC 9110 §13.1.2 weak comparison over a comma-separated
-        candidate list; ``*`` matches any current representation."""
+        candidate list; ``*`` matches any current representation.  Weak
+        comparison ignores ``W/`` on BOTH sides — a client revalidating
+        with a weakened cached tag still gets its 304."""
         if not if_none_match:
             return False
         if if_none_match.strip() == "*":
             return True
-        candidates = [c.strip().removeprefix("W/")
-                      for c in if_none_match.split(",")]
-        return etag in candidates
+        opaque = etag.removeprefix("W/")
+        return any(c.removeprefix("W/") == opaque
+                   for c in cls._parse_etag_list(if_none_match))
 
     def do_GET(self) -> None:           # noqa: N802 (http.server API)
         self._serve(head_only=False)

@@ -213,3 +213,95 @@ def scatter_recompose_from_batch(idx: Array, vals: Array,
 def hb_error_bound(level_bounds: List[float]) -> float:
     """HB L-inf bound: Σ_l e_l (+ base bound, passed as last entry)."""
     return float(np.sum(level_bounds))
+
+
+# ---------------------------------------------------------------------------
+# Interpolation-predicted (`ip`) representation
+# ---------------------------------------------------------------------------
+#
+# The `ip` method closes the prediction loop that HB leaves open: instead of
+# coding each level's interpolation surplus against the ORIGINAL data, it
+# codes the residual against the decoder's own truncated reconstruction of
+# all coarser groups.  Each group g records `pred_planes` (kp_g) — the plane
+# depth the encoder folded into its prediction.  The decoder's per-group
+# contribution is then
+#
+#     C_g = recompose_hb_from(scatter(T_g), levels, start=g)      (truncated
+#     C_g.ravel()[idx_g] += v̂_g - T_g                              + tail)
+#
+# with T_g = trunc(v̂_g, 2^{E_g - kp_g}).  Truncation to a power-of-two
+# quantum is EXACT in f64 (magnitudes are < 2^53 integer multiples of the
+# quantum), and for fetched depth k <= kp it is the identity, so the tail is
+# zero and C_g degenerates to the plain HB contribution.  When every group
+# is fetched at k_g >= kp_g the decoder's prediction replays the encoder's
+# bit-for-bit and per-node errors no longer sum across levels:
+#
+#     |x - x̂|_inf  <=  max_g e_g            (matched regime — the ip win)
+#
+# Under-fetched groups (k < kp) perturb the prediction of strictly finer
+# groups by at most δ_g = 2^{E-k} - 2^{E-kp}; multilinear interpolation is a
+# convex combination, so δ propagates without amplification and the exact
+# composition is `ip_error_bound` below — always <= the HB sum.
+
+
+def trunc_to_quantum(v: np.ndarray, quantum: float) -> np.ndarray:
+    """sign(v)·floor(|v|/q)·q — truncate toward zero to multiples of the
+    power-of-two quantum ``q``.  Exact in f64: |v| is an integer multiple
+    m·q with m < 2^53, the division recovers m exactly, and m·q is exact."""
+    v = np.asarray(v, dtype=np.float64)
+    if quantum == 0.0:
+        return v
+    return np.sign(v) * np.floor(np.abs(v) / quantum) * quantum
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def scatter_recompose_ip_from(idx: Array, vals: Array,
+                              shape: Tuple[int, ...], levels: int,
+                              start: int, quantum: Array) -> Array:
+    """`ip` counterpart of ``scatter_recompose_from``: truncate the decoded
+    values to the group's prediction quantum, scatter + partially recompose
+    the truncated part (the closed-loop prediction seed for finer groups),
+    then add the truncation tail back at the group's own nodes.  ``quantum``
+    is a traced operand (2^{E-kp}, or 0.0 for no truncation) so one compiled
+    graph serves every group of a given geometry."""
+    q = jnp.asarray(quantum, dtype=vals.dtype)
+    safe = jnp.where(q == 0.0, jnp.asarray(1.0, vals.dtype), q)
+    t = jnp.where(q == 0.0, vals,
+                  jnp.sign(vals) * jnp.floor(jnp.abs(vals) / safe) * safe)
+    field = jnp.zeros(int(np.prod(shape)), dtype=vals.dtype)
+    field = field.at[idx].set(t).reshape(shape)
+    out = _recompose_steps(field, min(start, levels - 1))
+    return out.reshape(-1).at[idx].add(vals - t).reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def scatter_recompose_ip_from_batch(idx: Array, vals: Array,
+                                    shape: Tuple[int, ...], levels: int,
+                                    start: int, quantum: Array) -> Array:
+    """vmapped ``scatter_recompose_ip_from`` over a leading batch axis —
+    the serve plane's batched tick for `ip` readers.  ``quantum`` carries
+    one entry per batch item."""
+    return jax.vmap(
+        lambda i, v, q: scatter_recompose_ip_from(i, v, shape, levels,
+                                                  start, q)
+    )(idx, vals, quantum)
+
+
+def ip_error_bound(level_bounds: List[float],
+                   mismatches: List[float]) -> float:
+    """`ip` L-inf bound.  Lists are finest-first (index 0 = finest detail,
+    last entry = base group), matching the reader's stream order.  Walking
+    coarse -> fine with a running prediction-mismatch accumulator m:
+
+        bound = max_g (e_g + m_g),   m_g = Σ_{g' coarser than g} δ_{g'}
+
+    where e_g is the group's own plane bound and δ_g its truncation-depth
+    mismatch (0 once fetched depth reaches the recorded ``pred_planes``).
+    Always <= hb_error_bound(level_bounds) and monotone under deeper
+    fetches."""
+    out = 0.0
+    m = 0.0
+    for e, d in zip(reversed(level_bounds), reversed(mismatches)):
+        out = max(out, float(e) + m)
+        m += float(d)
+    return float(out)

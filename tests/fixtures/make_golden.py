@@ -18,6 +18,12 @@ Writes, next to this script:
     golden_v34_expected.npz
                          v3 byte accounting + v4 per-timestep values,
                          bounds, and byte accounting
+    golden_ip/           sharded container carrying method="ip"
+                         (interpolation-predicted) variables — freezes the
+                         closed-loop prediction contract (pred_planes
+                         metadata + fixed-order contribution sum)
+    golden_ip_expected.npz
+                         ip reconstructions, bounds, byte accounting
 
 The fixtures freeze the *legacy* on-disk dialects so the codec registry's
 compatibility paths can never silently rot:
@@ -197,6 +203,43 @@ def record_v34_expected() -> None:
           f"v4 bytes_retrieved={s4.bytes_retrieved}")
 
 
+IP_VARS = ("S", "Vx")
+
+
+def _ip_fields():
+    """A smooth multi-octave field (where the interpolation predictor
+    genuinely bites) plus a rough synthetic one (where it must still
+    round-trip) — both deterministic."""
+    from repro.data.synthetic import smooth_field
+    return {"S": smooth_field((257,), seed=5, lo=-3.0, hi=9.0),
+            "Vx": ge_like_fields(n=N, seed=0)["Vx"]}
+
+
+def write_ip(directory: str) -> None:
+    """method="ip" fixture: the current encoder's sharded output, frozen.
+    Pins the closed-loop prediction contract — per-group ``pred_planes``
+    metadata and the fixed-order contribution sum the decoder replays —
+    so no refactor of the predictor can silently re-encode old archives."""
+    arch = refactor_variables(_ip_fields(), method="ip")
+    save_sharded_archive(arch, directory, shard_by="variable")
+
+
+def record_ip_expected() -> None:
+    expected = {}
+    sa = open_archive(os.path.join(HERE, "golden_ip"))
+    session = sa.open()
+    for eps_i, eps in enumerate(EPS_LADDER):
+        for v in IP_VARS:
+            data, bound = session.reconstruct(v, eps)
+            expected[f"ip__{v}__eps{eps_i}"] = data
+            expected[f"ip__{v}__bound{eps_i}"] = np.float64(bound)
+    expected["ip__eps_ladder"] = np.asarray(EPS_LADDER)
+    expected["ip__bytes_retrieved"] = np.int64(session.bytes_retrieved)
+    np.savez_compressed(os.path.join(HERE, "golden_ip_expected.npz"),
+                        **expected)
+    print(f"ip bytes_retrieved={session.bytes_retrieved}")
+
+
 def main(only: str = "all") -> None:
     if only in ("all", "v12"):
         fields = ge_like_fields(n=N, seed=0)
@@ -225,6 +268,11 @@ def main(only: str = "all") -> None:
         write_v4(os.path.join(HERE, "golden_v4"))
         record_v34_expected()
         print(f"wrote v3/v4 fixtures under {HERE}")
+
+    if only in ("all", "ip"):
+        write_ip(os.path.join(HERE, "golden_ip"))
+        record_ip_expected()
+        print(f"wrote ip fixture under {HERE}")
 
 
 if __name__ == "__main__":

@@ -119,6 +119,7 @@ def test_healing_faults_are_bit_identical(method, seed):
         sa.close()
 
 
+@pytest.mark.slow  # ~26s schedule; nightly -m chaos still runs it (budget)
 @pytest.mark.parametrize("seed", (0,))
 def test_permanent_loss_degrades_with_certified_bound(seed):
     """Losing a whole variable shard yields a flagged degraded result whose
@@ -154,6 +155,7 @@ def test_permanent_loss_degrades_with_certified_bound(seed):
         sa.close()
 
 
+@pytest.mark.slow  # ~10s schedule; nightly -m chaos still runs it (budget)
 @pytest.mark.parametrize("seed", (3,))
 def test_faults_then_loss_compose(seed):
     """Transient faults on the surviving shards + permanent loss of one:

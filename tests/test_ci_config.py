@@ -230,6 +230,10 @@ def test_workflow_commands_are_runnable_here():
     # speedup, tail amplification) ride the same gate
     assert "--only store,entropy,robust,serve" in joined
     assert "--prefix serve/" in joined
+    # ... and the ip-vs-hb bytes-at-equal-bound rows (the interpolation-
+    # predicted representation's scoreboard) are diffed on every PR
+    assert "--only store,entropy,robust,serve,rate_distortion" in joined
+    assert "--prefix rate_distortion/ip_vs_hb" in joined
     assert "python -m tools.check_links README.md docs" in joined
     # CI must stay one-sided/loose: the committed baseline is not recorded
     # on the runner class (two-sided 1.5x is the local invocation)
@@ -273,11 +277,12 @@ def test_codec_conformance_suite_rides_in_tier1():
             assert "mark.slow" not in fh.read(), \
                 f"{fname} must stay in the tier-1 (not-slow) selection"
     for fixture in ("golden_v1.prs", "golden_expected.npz",
-                    "golden_v34_expected.npz",
+                    "golden_v34_expected.npz", "golden_ip_expected.npz",
                     os.path.join("golden_v2", "manifest.json"),
                     os.path.join("golden_v3", "manifest.json"),
                     os.path.join("golden_v4", "manifest.json"),
-                    os.path.join("golden_v4", "journal.jsonl")):
+                    os.path.join("golden_v4", "journal.jsonl"),
+                    os.path.join("golden_ip", "manifest.json")):
         assert os.path.exists(
             os.path.join(REPO, "tests", "fixtures", fixture)), fixture
 
@@ -297,6 +302,28 @@ def test_live_archive_bench_rows_ride_the_gate():
                    baseline["store/append_delta_bytes"]["derived"].split(";"))
     assert float(derived["ratio"]) < 0.9, \
         "recorded delta timesteps are not measurably smaller than keyframes"
+
+
+def test_ip_bench_rows_ride_the_gate():
+    """The ip-vs-hb bytes-at-equal-QoI-bound rows are part of the committed
+    baseline (the bench gate's --prefix rate_distortion/ip_vs_hb pulls
+    them in), and the recorded economics show the win the predictor exists
+    for: ip <= hb wire bytes at every recorded point, strictly smaller at
+    the mid bitrates."""
+    import json
+    with open(os.path.join(REPO, "BENCH_kernels.json")) as fh:
+        baseline = json.load(fh)
+    rows = [n for n in baseline
+            if n.startswith("rate_distortion/ip_vs_hb/")]
+    assert len(rows) >= 3, "ip_vs_hb rows missing from baseline"
+    ratios = []
+    for name in rows:
+        derived = dict(kv.split("=", 1) for kv in
+                       baseline[name]["derived"].split(";"))
+        assert int(derived["ip_bytes"]) <= int(derived["hb_bytes"]), name
+        ratios.append(float(derived["ratio"]))
+    assert min(ratios) < 1.0, \
+        "recorded ip rows show no byte win over hb at any bitrate"
 
 
 def test_device_decode_rows_ride_the_gate():
@@ -334,6 +361,58 @@ def test_decode_conformance_suite_rides_in_tier1():
         assert "mark.slow" not in fh.read(), \
             "test_decode_conformance.py must stay in the tier-1 " \
             "(not-slow) selection"
+
+
+def test_tier1_time_budget_structure():
+    """Tier-1 must fit the CI matrix job's ~5-minute budget.  Wall-clock
+    itself is machine-dependent, so the budget is asserted structurally:
+
+    * the named heavyweights (a ~60s train-convergence run, the largest
+      reduced-config model smokes, the two long single-seed chaos
+      schedules) carry `slow` marks and run nightly instead;
+    * every hypothesis `max_examples` setting stays at or below the
+      deterministic shim's cap (tests/_hypothesis_shim.py), so a
+      real-hypothesis environment never runs a property test longer than
+      the shim-backed CI leg does.
+    """
+    import re
+    src_train = open(os.path.join(REPO, "tests", "test_train_substrate.py"),
+                     encoding="utf-8").read()
+    m = re.search(r"(@pytest\.mark\.slow[^\n]*\n)+"
+                  r"def test_grad_compression_convergence_parity",
+                  src_train)
+    assert m, "grad-compression convergence run must be slow-marked"
+
+    src_models = open(os.path.join(REPO, "tests", "test_models_smoke.py"),
+                      encoding="utf-8").read()
+    assert "_HEAVY_TRAIN" in src_models and \
+        "marks=pytest.mark.slow" in src_models, \
+        "heaviest model-smoke params must carry slow marks"
+    for arch in ("zamba2-2.7b", "seamless-m4t-medium", "mamba2-780m",
+                 "llama4-maverick-400b-a17b"):
+        assert arch in src_models, arch
+
+    src_chaos = open(os.path.join(REPO, "tests", "test_chaos.py"),
+                     encoding="utf-8").read()
+    for fn in ("test_permanent_loss_degrades_with_certified_bound",
+               "test_faults_then_loss_compose"):
+        m = re.search(r"@pytest\.mark\.slow[^\n]*\n"
+                      r"(@pytest\.[^\n]*\n)*def " + fn, src_chaos)
+        assert m, f"{fn} must be slow-marked (still nightly via -m chaos)"
+
+    shim = open(os.path.join(REPO, "tests", "_hypothesis_shim.py"),
+                encoding="utf-8").read()
+    m = re.search(r"_MAX_EXAMPLES_CAP\s*=\s*(\d+)", shim)
+    assert m, "_hypothesis_shim.py must declare _MAX_EXAMPLES_CAP"
+    cap = int(m.group(1))
+    for fname in sorted(os.listdir(os.path.join(REPO, "tests"))):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(REPO, "tests", fname), encoding="utf-8") as fh:
+            for n in re.findall(r"max_examples=(\d+)", fh.read()):
+                assert int(n) <= cap, \
+                    f"{fname}: max_examples={n} exceeds the shim cap {cap}" \
+                    " — property tests must not outgrow the tier-1 budget"
 
 
 def test_opener_deprecation_warning_is_an_error_in_ci():

@@ -94,7 +94,7 @@ def test_prefix_decode_paths_bit_identical(k, sign_mode):
     assert plane_bound(lbp, k) == plane_bound(lbp, min(k, lbp.nbits))
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=15, deadline=None)
 @given(data=st.data())
 def test_prefix_decode_paths_bit_identical_property(data):
     """Property form: random sizes (crossing uint32-word boundaries), random
@@ -185,6 +185,83 @@ def test_fused_values_device_matches_host_values(restore_decode_path):
     s2.fetch_to_planes(33)
     assert s2.values_device() is None
     assert np.array_equal(_bits(s2.values()), _bits(s.values()))
+
+
+# ------------------------------------------------------ zero-plane flushes --
+
+
+def _fused_inputs(lbp, k):
+    from repro.bitplane.encoder import inflate_planes, sign_plane_bytes
+    m = lbp.meta()
+    words, shifts = inflate_planes(m.count, m.nbits, lbp.planes[:k], 0)
+    sb = sign_plane_bytes(m.count, lbp.signs)
+    scale = np.float64(2.0) ** (m.exponent - m.nbits)
+    return words, shifts, sb, scale
+
+
+def test_zero_plane_fused_flush_is_noop():
+    """A flush with ZERO new planes (e.g. a follow-mode refresh that moved
+    nothing) must pass the magnitude state through untouched and decode the
+    same bits — for both degenerate word layouts, (0,) and (0, 0) — and
+    ``prepare_fused_decode`` must keep the group's TRUE word width for
+    them, not collapse state/signs to zero-width arrays."""
+    lbp = encode_level(_coeffs(700, seed=21, sign_mode="mixed"))
+    m = lbp.meta()
+    words, shifts, sb, scale = _fused_inputs(lbp, 17)
+    mag, vals = ops.decode_values_fused(words, shifts, None, sb, scale,
+                                        m.count)
+    ref = _bits(np.asarray(vals)).copy()
+    for empty in (np.zeros((0,), np.uint32), np.zeros((0, 0), np.uint32)):
+        mag2, vals2 = ops.decode_values_fused(empty,
+                                              np.zeros(0, np.uint64),
+                                              mag, sb, scale, m.count)
+        assert np.array_equal(np.asarray(mag2), np.asarray(mag)), empty.shape
+        assert vals2.shape == (m.count,)
+        assert np.array_equal(_bits(np.asarray(vals2)), ref), empty.shape
+    nwords = (m.count + 31) // 32
+    w, sh, st, sbp = ops.prepare_fused_decode(np.zeros((0,), np.uint32),
+                                              np.zeros(0, np.uint64),
+                                              mag, sb, m.count)
+    assert w.shape[1] == nwords
+    assert st.shape[0] == nwords * 32 and sbp.shape[0] == nwords * 4
+    assert not w.any() and not sh.any()          # pure no-op planes
+
+
+def test_batched_zero_plane_ticket_bit_identical(restore_decode_path):
+    """A DecodeBatcher bucket containing a zero-plane item: the empty item
+    keeps its group's word width (so it SHARES the bucket with a real
+    same-width flush instead of forcing a stray dispatch), comes back
+    shaped (count,), and matches the solo fused dispatch bit-for-bit —
+    without disturbing its batch-mate."""
+    from repro.serve.batch import DecodeBatcher
+
+    ops.set_decode_path("fused")
+    lbp = encode_level(_coeffs(700, seed=22, sign_mode="mixed"))
+    m = lbp.meta()
+    words, shifts, sb, scale = _fused_inputs(lbp, 17)
+    empty_w = np.zeros((0,), np.uint32)
+    empty_s = np.zeros(0, np.uint64)
+    mag_a, vals_a = ops.decode_values_fused(words, shifts, None, sb, scale,
+                                            m.count)
+    state = np.asarray(mag_a)
+    mag_b, vals_b = ops.decode_values_fused(empty_w, empty_s, state, sb,
+                                            scale, m.count)
+    batcher = DecodeBatcher(window_ms=0.0)
+    t_real = batcher.submit_decode(words, shifts, None, sb, scale, m.count)
+    t_zero = batcher.submit_decode(empty_w, empty_s, state, sb, scale,
+                                   m.count)
+    assert t_real.key == t_zero.key          # one shared vmapped bucket
+    batcher.flush()
+    got_mag_z, got_vals_z = t_zero.result()
+    _, got_vals_r = t_real.result()
+    stats = batcher.stats.as_dict()
+    assert stats["decode_dispatches"] == 1 and stats["decode_batched"] == 2
+    assert got_vals_z.shape == (m.count,)
+    assert np.array_equal(_bits(np.asarray(got_vals_r)),
+                          _bits(np.asarray(vals_a)))
+    assert np.array_equal(_bits(np.asarray(got_vals_z)),
+                          _bits(np.asarray(vals_b)))
+    assert np.array_equal(np.asarray(got_mag_z), np.asarray(mag_b))
 
 
 # -------------------------------------------- sessions across all methods --

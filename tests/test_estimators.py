@@ -27,7 +27,7 @@ def _le(actual, bound, scale=0.0):
     return actual <= bound * (1 + RTOL) + 8 * ULP * abs(scale) + 1e-300
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(x=FLOATS, eps=POS, t=UNIT, n=st.integers(min_value=1, max_value=6))
 def test_intpow_bound(x, eps, t, n):
     xi = t * eps
@@ -36,7 +36,7 @@ def test_intpow_bound(x, eps, t, n):
     assert _le(actual, bound, scale=abs(x) ** n)
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(x=st.floats(min_value=0.0, max_value=1e8), eps=POS, t=UNIT,
        tight=st.booleans())
 def test_sqrt_bound(x, eps, t, tight):
@@ -47,7 +47,7 @@ def test_sqrt_bound(x, eps, t, tight):
     assert _le(actual, bound, scale=np.sqrt(x))
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(x=FLOATS, eps=POS, t=UNIT, c=FLOATS)
 def test_radical_bound(x, eps, t, c):
     if abs(x + c) <= eps * 1.0000001 or abs(x + c) < 1e-10:
@@ -63,7 +63,7 @@ def test_radical_guard_returns_inf():
     assert np.isinf(est.bound_radical(np.float64(-0.5), np.float64(1.0), 0.5))
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(data=st.data(), n=st.integers(min_value=1, max_value=5))
 def test_sum_bound(data, n):
     xs = [data.draw(FLOATS) for _ in range(n)]
@@ -75,7 +75,7 @@ def test_sum_bound(data, n):
     assert _le(actual, bound, scale=sum(abs(a) for a in coeffs))
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(x1=FLOATS, x2=FLOATS, e1=POS, e2=POS, t1=UNIT, t2=UNIT)
 def test_prod_bound(x1, x2, e1, e2, t1, t2):
     actual = abs((x1 + t1 * e1) * (x2 + t2 * e2) - x1 * x2)
@@ -84,7 +84,7 @@ def test_prod_bound(x1, x2, e1, e2, t1, t2):
     assert _le(actual, bound, scale=abs(x1 * x2))
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(x1=FLOATS, x2=FLOATS, e1=POS, e2=POS, t1=UNIT, t2=UNIT)
 def test_quot_bound(x1, x2, e1, e2, t1, t2):
     if abs(x2) <= e2 * 1.0000001 or abs(x2) < 1e-10:
@@ -110,7 +110,7 @@ def test_zero_eps_is_zero_bound():
     assert float(est.bound_prod(z, z, z, z)) == 0.0
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(x=st.floats(min_value=1e-10, max_value=1e8), eps=POS, t=UNIT)
 def test_log_bound(x, eps, t):
     """Beyond-paper Log basis: valid upper bound when eps < x."""

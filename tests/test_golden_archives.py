@@ -36,7 +36,9 @@ V1_PATH = os.path.join(FIXTURES, "golden_v1.prs")
 V2_DIR = os.path.join(FIXTURES, "golden_v2")
 V3_DIR = os.path.join(FIXTURES, "golden_v3")
 V4_DIR = os.path.join(FIXTURES, "golden_v4")
+IP_DIR = os.path.join(FIXTURES, "golden_ip")
 VARS = ("Vx", "Vy", "Vz")
+IP_VARS = ("S", "Vx")
 V4_T = 6
 
 
@@ -171,6 +173,44 @@ def test_golden_v4_replays_bit_identically(expected_v34):
         assert st.bytes_retrieved == int(expected_v34["v4__bytes_retrieved"])
         # fully replayed: nothing left for refresh to apply
         assert sa.refresh() == 0
+
+
+@pytest.fixture(scope="module")
+def expected_ip():
+    with np.load(os.path.join(FIXTURES, "golden_ip_expected.npz")) as z:
+        return {k: z[k] for k in z.files}
+
+
+def test_golden_ip_decodes_bit_identically(expected_ip):
+    """The committed method="ip" archive: reconstructions, certified
+    bounds, and byte accounting must match both the recorded expectations
+    and a fresh in-memory refactor — freezing the closed-loop prediction
+    contract (pred_planes metadata + fixed-order contribution sum) so no
+    predictor refactor can silently re-encode old ip archives."""
+    from repro.data.synthetic import smooth_field
+    assert _manifest_version(IP_DIR) == 3      # no new format version
+    fields = ge_like_fields(n=1 << 10, seed=0)
+    fresh = refactor_variables(
+        {"S": smooth_field((257,), seed=5, lo=-3.0, hi=9.0),
+         "Vx": fields["Vx"]}, method="ip").open()
+    with open_archive(IP_DIR) as sa:
+        assert all(v.method == "ip" for v in sa.variables.values())
+        st = sa.open()
+        for eps_i, eps in enumerate(expected_ip["ip__eps_ladder"]):
+            for v in IP_VARS:
+                data, bound = st.reconstruct(v, float(eps))
+                np.testing.assert_array_equal(
+                    data, expected_ip[f"ip__{v}__eps{eps_i}"],
+                    err_msg=f"ip {v} at eps={eps} drifted from recorded")
+                assert bound == float(expected_ip[f"ip__{v}__bound{eps_i}"])
+                ref, ref_bound = fresh.reconstruct(v, float(eps))
+                np.testing.assert_array_equal(
+                    data, ref,
+                    err_msg=f"ip {v} at eps={eps} drifted from a fresh "
+                            f"refactor — cross-generation bit identity "
+                            f"broken")
+                assert bound == ref_bound
+        assert st.bytes_retrieved == int(expected_ip["ip__bytes_retrieved"])
 
 
 def test_golden_v4_delta_blobs_beat_keyframes():

@@ -226,6 +226,47 @@ def test_parse_range_zero_length_resource():
     assert parse_range("bytes=-", 0) is None             # malformed -> 200
 
 
+def test_http_conditional_get_etag_lists(served_prs):
+    """RFC 9110 §13.1.2 ``If-None-Match`` handling: comma-separated
+    candidate lists, ``W/`` weak prefixes (on either side of the compare),
+    and commas *inside* quoted entity-tags (legal ``etagc``) must all
+    revalidate correctly — a naive ``split(",")`` mis-parses the last."""
+    import http.client
+
+    srv, _ = served_prs
+    host, port = srv.server_address[:2]
+    conn = http.client.HTTPConnection(host, port, timeout=10)
+    try:
+        # learn the real (quoted, strong) etag from an unconditional GET
+        conn.request("GET", "/a.prs", headers={"Range": "bytes=0-0"})
+        resp = conn.getresponse()
+        resp.read()
+        etag = resp.getheader("ETag")
+        assert etag and etag.startswith('"')
+
+        def probe(inm):
+            conn.request("GET", "/a.prs", headers={"If-None-Match": inm})
+            r = conn.getresponse()
+            r.read()
+            return r.status
+
+        before = srv.stats["not_modified"]
+        # multi-candidate list containing the current etag
+        assert probe(f'"stale-1", {etag}, "stale-2"') == 304
+        # weak candidate: weak comparison ignores W/ on the client side
+        assert probe(f"W/{etag}") == 304
+        # a candidate with a comma INSIDE its quotes must not split the
+        # list and hide the real etag behind it
+        assert probe(f'"sha,256-abc", {etag}') == 304
+        # ...nor may the comma-carrying stale tag spuriously match
+        assert probe('"sha,256-abc", "stale"') == 200
+        assert probe('"nope"') == 200
+        assert probe("*") == 304
+        assert srv.stats["not_modified"] - before == 4
+    finally:
+        conn.close()
+
+
 def test_http_416_on_zero_length_resource(tmp_path):
     """End to end: a suffix Range against an empty file answers 416 with an
     empty body and a ``bytes */0`` Content-Range, not a hung/garbage 206."""

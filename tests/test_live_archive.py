@@ -227,6 +227,60 @@ def test_retention_boundary_always_a_keyframe(tmp_path):
     assert var.timesteps[0].keyframe
 
 
+def test_retention_keyframe_interval_one(tmp_path):
+    """``keyframe_interval=1``: every step is a keyframe, so the snap-down
+    is the identity — the boundary must land EXACTLY on the target (no
+    off-by-one widening the window), no delta chain can anchor past it,
+    and the dropped steps' blobs must not linger on disk."""
+    frames = _frames(t=7)
+    live = str(tmp_path / "live")
+    with ArchiveWriter.create(live, keyframe_interval=1,
+                              retain_timesteps=3) as w:
+        for f in frames:
+            w.append({"T": f}, eps=EPS)
+    sa = open_archive(live)
+    var = sa.variables["T"]
+    assert var.base_t == 4                      # 7 - 3, no snapping slack
+    for t in range(4, 7):
+        assert var.handle(t).keyframe
+    with pytest.raises(KeyError, match="retention"):
+        var.handle(3)
+    for t in range(4):                          # no orphaned segment blobs
+        assert not os.path.exists(os.path.join(live, f"T.t{t}.seg"))
+    st = sa.open()
+    reader = st.reader("T")
+    for t in range(4, 7):
+        data, bound = reader.read(t)
+        assert float(np.max(np.abs(data - frames[t]))) <= bound
+
+
+def test_retention_window_covering_all_steps_drops_nothing(tmp_path):
+    """``retain >= appended steps``: the retention target is <= 0, which
+    must behave as "keep everything" — base stays at t=0, the live head
+    chain survives intact, and no blob is unlinked."""
+    frames = _frames(t=4)
+    live = str(tmp_path / "live")
+    with ArchiveWriter.create(live, keyframe_interval=2,
+                              retain_timesteps=9) as w:
+        for f in frames:
+            w.append({"T": f}, eps=EPS)
+        sa = open_archive(live)
+        var = sa.variables["T"]
+        assert var.base_t == 0
+        assert len(var.timesteps) == 4
+        for t in range(4):
+            assert os.path.exists(os.path.join(live, f"T.t{t}.seg"))
+        st = sa.open()
+        reader = st.reader("T")
+        for t in range(4):
+            data, bound = reader.read(t)
+            assert float(np.max(np.abs(data - frames[t]))) <= bound
+        # the exact-equality edge (retain == appended) also keeps it all
+        w.append({"T": frames[0]}, eps=EPS)     # now 5 appended, retain 9
+        sa.refresh()
+        assert sa.variables["T"].base_t == 0
+
+
 # ---------------------------------------------------------------------------
 # sealing
 # ---------------------------------------------------------------------------

@@ -210,7 +210,7 @@ def test_get_refreshes_recency():
     assert "a" in cache and "b" not in cache
 
 
-@settings(max_examples=30, deadline=None)
+@settings(max_examples=15, deadline=None)
 @given(data=st.data())
 def test_depth_weighted_eviction_dominance_property(data):
     """No surviving entry is strictly dominated by an evicted one: if s was

@@ -108,6 +108,7 @@ def test_checkpoint_bytes_scale_with_tau(tmp_path, setup):
 
 # --------------------------------------------------------- grad compress --
 
+@pytest.mark.slow  # ~60s: 24 full train steps; nightly (tier-1 time budget)
 def test_grad_compression_convergence_parity(setup):
     """Error feedback keeps training on track: 12 steps with 8-plane
     compression reach a loss close to the uncompressed run."""

@@ -38,7 +38,7 @@ def test_level_map_partitions_grid(shape):
     np.testing.assert_array_equal(lm == L, base)
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=12, deadline=None)
 @given(seed=st.integers(0, 10_000), ndim=st.integers(1, 3))
 def test_hb_linf_bound_composition(seed, ndim):
     """Perturb each level's coefficients by e_l; reconstruction error must
@@ -60,7 +60,7 @@ def test_hb_linf_bound_composition(seed, ndim):
     assert err <= e_levels.sum() * (1 + 1e-9)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 10_000), ndim=st.integers(1, 2))
 def test_ob_linf_bound_composition(seed, ndim):
     """Same for OB with the (1+κ) amplification (κ = 3^d)."""
